@@ -1,0 +1,274 @@
+"""The paper's workload suite (Table 1), rebuilt in JAX and traced to
+StitchIR.
+
+Six micro-benchmarks follow the TensorFlow-Examples models the paper used
+(logistic, word2vec, bi-rnn, dyn-rnn, perceptron, var-encoder) — each traced
+as a full TRAINING step (forward + backward via ``jax.grad``), matching the
+paper's setting where all micro-benchmarks are training graphs.  The four
+industry models are structural proxies at reduced width: ``nmt`` (attention
+encoder-decoder inference), ``multi-interests`` (the paper's Fig. 1 motif:
+embedding reductions + small batched GEMMs + elementwise glue),
+``rokid``/``aiwriter`` (deep stacks of fine-grained mixed ops).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Graph
+from repro.core.trace import trace_to_graph
+
+RNG = np.random.default_rng(0)
+
+
+def _f32(*shape, scale=0.1):
+    return (RNG.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# micro-benchmarks (training steps, fwd+bwd)
+# ---------------------------------------------------------------------------
+
+def logistic() -> Graph:
+    X, y = _f32(256, 784, scale=1.0), RNG.integers(0, 2, 256).astype(np.float32)
+    w, b = _f32(784), np.float32(0.0)
+
+    def loss(w, b):
+        p = jax.nn.sigmoid(X @ w + b)
+        return -jnp.mean(y * jnp.log(p + 1e-7) + (1 - y) * jnp.log1p(-p + 1e-7))
+
+    def step(w, b):
+        l, (gw, gb) = jax.value_and_grad(loss, argnums=(0, 1))(w, b)
+        return l, w - 0.1 * gw, b - 0.1 * gb
+
+    g, _ = trace_to_graph(step, w, b, name="logistic")
+    return g
+
+
+def word2vec() -> Graph:
+    V, D, B = 2048, 128, 256
+    emb, out = _f32(V, D), _f32(V, D)
+    ctx = RNG.integers(0, V, B)
+    pos = RNG.integers(0, V, B)
+    neg = RNG.integers(0, V, (B, 5))
+
+    def loss(emb, out):
+        h = emb[ctx]                                   # (B, D)
+        s_pos = jnp.sum(h * out[pos], axis=-1)
+        s_neg = jnp.einsum("bd,bkd->bk", h, out[neg])
+        return -jnp.mean(jax.nn.log_sigmoid(s_pos)) \
+            - jnp.mean(jax.nn.log_sigmoid(-s_neg))
+
+    def step(emb, out):
+        l, (ge, go) = jax.value_and_grad(loss, argnums=(0, 1))(emb, out)
+        return l, emb - 0.1 * ge, out - 0.1 * go
+
+    g, _ = trace_to_graph(step, emb, out, name="word2vec")
+    return g
+
+
+def _rnn_cell(h, x, wx, wh, b):
+    return jnp.tanh(x @ wx + h @ wh + b)
+
+
+def bi_rnn() -> Graph:
+    B, T, D, H = 64, 8, 64, 128
+    xs = _f32(T, B, D, scale=1.0)
+    y = RNG.integers(0, 10, B)
+    params = (_f32(D, H), _f32(H, H), _f32(H), _f32(D, H), _f32(H, H), _f32(H),
+              _f32(2 * H, 10))
+
+    def loss(*p):
+        wxf, whf, bf, wxb, whb, bb, wo = p
+        hf = jnp.zeros((B, H))
+        hb = jnp.zeros((B, H))
+        for t in range(T):                     # unrolled: fine-grained ops
+            hf = _rnn_cell(hf, xs[t], wxf, whf, bf)
+            hb = _rnn_cell(hb, xs[T - 1 - t], wxb, whb, bb)
+        logits = jnp.concatenate([hf, hb], -1) @ wo
+        return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(B), y])
+
+    def step(*p):
+        l, gs = jax.value_and_grad(loss, argnums=tuple(range(7)))(*p)
+        return (l,) + tuple(pi - 0.1 * gi for pi, gi in zip(p, gs))
+
+    g, _ = trace_to_graph(step, *params, name="bi_rnn")
+    return g
+
+
+def dyn_rnn() -> Graph:
+    B, T, D, H = 64, 12, 64, 128
+    xs = _f32(T, B, D, scale=1.0)
+    lens = RNG.integers(1, T + 1, B)
+    y = RNG.integers(0, 10, B)
+    params = (_f32(D, H), _f32(H, H), _f32(H), _f32(H, 10))
+
+    def loss(wx, wh, b, wo):
+        h = jnp.zeros((B, H))
+        out = jnp.zeros((B, H))
+        for t in range(T):                     # dynamic masking per step
+            nh = _rnn_cell(h, xs[t], wx, wh, b)
+            mask = (t < lens)[:, None].astype(jnp.float32)
+            h = mask * nh + (1 - mask) * h
+            out = jnp.where(t + 1 == lens[:, None], h, out)
+        logits = out @ wo
+        return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(B), y])
+
+    def step(*p):
+        l, gs = jax.value_and_grad(loss, argnums=(0, 1, 2, 3))(*p)
+        return (l,) + tuple(pi - 0.1 * gi for pi, gi in zip(p, gs))
+
+    g, _ = trace_to_graph(step, *params, name="dyn_rnn")
+    return g
+
+
+def perceptron() -> Graph:
+    B, D, H1, H2, C = 256, 784, 256, 256, 10
+    X = _f32(B, D, scale=1.0)
+    y = RNG.integers(0, C, B)
+    params = (_f32(D, H1), _f32(H1), _f32(H1, H2), _f32(H2), _f32(H2, C), _f32(C))
+
+    def loss(w1, b1, w2, b2, w3, b3):
+        h = jax.nn.relu(X @ w1 + b1)
+        h = jax.nn.relu(h @ w2 + b2)
+        logits = h @ w3 + b3
+        return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(B), y])
+
+    def step(*p):
+        l, gs = jax.value_and_grad(loss, argnums=tuple(range(6)))(*p)
+        return (l,) + tuple(pi - 0.1 * gi for pi, gi in zip(p, gs))
+
+    g, _ = trace_to_graph(step, *params, name="perceptron")
+    return g
+
+
+def var_encoder() -> Graph:
+    B, D, H, Z = 128, 784, 256, 32
+    X = _f32(B, D, scale=1.0)
+    eps = _f32(B, Z, scale=1.0)
+    params = (_f32(D, H), _f32(H), _f32(H, Z), _f32(H, Z),
+              _f32(Z, H), _f32(H), _f32(H, D), _f32(D))
+
+    def loss(we, be, wmu, wlv, wd, bd, wo, bo):
+        h = jnp.tanh(X @ we + be)
+        mu, logvar = h @ wmu, h @ wlv
+        z = mu + jnp.exp(0.5 * logvar) * eps
+        hd = jnp.tanh(z @ wd + bd)
+        xr = jax.nn.sigmoid(hd @ wo + bo)
+        recon = -jnp.mean(jnp.sum(
+            X * jnp.log(xr + 1e-7) + (1 - X) * jnp.log1p(-xr + 1e-7), -1))
+        kl = -0.5 * jnp.mean(jnp.sum(1 + logvar - mu**2 - jnp.exp(logvar), -1))
+        return recon + kl
+
+    def step(*p):
+        l, gs = jax.value_and_grad(loss, argnums=tuple(range(8)))(*p)
+        return (l,) + tuple(pi - 0.1 * gi for pi, gi in zip(p, gs))
+
+    g, _ = trace_to_graph(step, *params, name="var_encoder")
+    return g
+
+
+# ---------------------------------------------------------------------------
+# industry-model proxies
+# ---------------------------------------------------------------------------
+
+def nmt() -> Graph:
+    """Attention decoder step (inference): the paper's nmt is inference."""
+    B, S, D, H = 32, 64, 256, 8
+    dh = D // H
+    enc = _f32(B, S, D, scale=1.0)
+    x = _f32(B, D, scale=1.0)
+    wq, wk, wv, wo = _f32(D, D), _f32(D, D), _f32(D, D), _f32(D, D)
+    w1, w2 = _f32(D, 4 * D), _f32(4 * D, D)
+    gamma = _f32(D, scale=1.0)
+
+    def decode(x):
+        q = (x @ wq).reshape(B, H, dh)
+        k = (enc @ wk).reshape(B, S, H, dh)
+        v = (enc @ wv).reshape(B, S, H, dh)
+        att = jnp.einsum("bhd,bshd->bhs", q, k) / np.sqrt(dh)
+        p = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhs,bshd->bhd", p, v).reshape(B, D)
+        h = ctx @ wo + x
+        h = h * jax.lax.rsqrt(jnp.mean(h * h, -1, keepdims=True) + 1e-6) * gamma
+        return h + jax.nn.relu(h @ w1) @ w2
+
+    g, _ = trace_to_graph(decode, x, name="nmt")
+    return g
+
+
+def multi_interests() -> Graph:
+    """The paper's Fig. 1 motif: two small/batched GEMMs bracketing a large
+    intermediate, stitched with reductions and elementwise glue."""
+    B, M, K, N = 256, 32, 16, 64
+    u = _f32(B, M, K, scale=1.0)
+    w = _f32(B, K, N, scale=1.0)
+    t = _f32(B, M, N, scale=1.0)
+
+    def f(u, w, t):
+        dot_1 = jnp.einsum("bmk,bkn->bmn", u, w)          # small -> large
+        e = jnp.exp(dot_1 - jnp.max(dot_1, axis=-1, keepdims=True))
+        sm = e / jnp.sum(e, axis=-1, keepdims=True)
+        mul = sm * jax.nn.sigmoid(t)
+        red = jnp.sum(mul, axis=1)                        # (B, N)
+        dot_2 = jnp.einsum("bmn,bn->bm", dot_1, red)      # large -> small
+        div = dot_2 / (1.0 + jnp.sum(jnp.abs(dot_2), -1, keepdims=True))
+        log_1 = jnp.log1p(jnp.abs(red))
+        sub = jnp.tanh(dot_2) - 0.5
+        return div, log_1, mul * 2.0, sub
+
+    g, _ = trace_to_graph(f, u, w, t, name="multi_interests")
+    return g
+
+
+def _deep_stack(name: str, depth: int, B=128, D=256) -> Graph:
+    """rokid/aiwriter proxy: long chains of fine-grained mixed ops."""
+    x = _f32(B, D, scale=1.0)
+    ws = [_f32(D, D) for _ in range(4)]
+    gamma = _f32(D, scale=1.0)
+
+    def f(x):
+        h = x
+        for i in range(depth):
+            h = h @ ws[i % 4]
+            h = h * jax.lax.rsqrt(jnp.mean(h * h, -1, keepdims=True) + 1e-6)
+            h = jax.nn.silu(h) + 0.1 * jnp.tanh(h) * gamma
+            if i % 3 == 2:
+                h = h - jnp.mean(h, axis=0, keepdims=True)
+        return jnp.sum(h * h)
+
+    def step(x):
+        l, gx = jax.value_and_grad(f)(x)
+        return l, x - 0.1 * gx
+
+    g, _ = trace_to_graph(step, x, name=name)
+    return g
+
+
+def rokid() -> Graph:
+    return _deep_stack("rokid", depth=12)
+
+
+def aiwriter() -> Graph:
+    return _deep_stack("aiwriter", depth=20)
+
+
+WORKLOADS = {
+    "nmt": nmt,
+    "multi-interests": multi_interests,
+    "rokid": rokid,
+    "aiwriter": aiwriter,
+    "logistic": logistic,
+    "word2vec": word2vec,
+    "bi-rnn": bi_rnn,
+    "dyn-rnn": dyn_rnn,
+    "perceptron": perceptron,
+    "var-encoder": var_encoder,
+}
+
+
+def build_all() -> dict[str, Graph]:
+    return {name: fn() for name, fn in WORKLOADS.items()}

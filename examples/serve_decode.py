@@ -1,0 +1,13 @@
+"""Serve a small model with batched requests (prefill + greedy decode).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "qwen3-1.7b", "--reduced",
+                "--batch", "4", "--prompt-len", "32", "--new-tokens", "16"]
+    serve_main()

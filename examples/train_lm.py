@@ -1,0 +1,19 @@
+"""End-to-end driver: train a ~100M-param qwen3-family LM for a few hundred
+steps on CPU with checkpointing + fault-tolerant supervision.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+(thin wrapper over repro.launch.train with a ~100M config)
+"""
+
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    sys.argv = [sys.argv[0], "--arch", "qwen3-1.7b", "--reduced",
+                # widen the smoke config to ~100M params: 8 layers x 512 wide
+                "--d-model", "512", "--n-layers", "8",
+                "--batch", "8", "--seq", "128", "--steps", "300",
+                "--ckpt-dir", "/tmp/repro_train_lm"] + args
+    train_main()

@@ -1,0 +1,39 @@
+"""Architecture registry: one module per assigned arch, exact public configs.
+
+``get_config(name)`` -> full ModelConfig; ``get_reduced(name)`` -> tiny
+same-family config for CPU smoke tests.  ``ARCHS`` lists all ids.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCHS = [
+    "granite_moe_1b_a400m",
+    "qwen2_moe_a2_7b",
+    "phi3_mini_3_8b",
+    "qwen3_1_7b",
+    "nemotron_4_15b",
+    "qwen2_5_32b",
+    "seamless_m4t_medium",
+    "recurrentgemma_9b",
+    "falcon_mamba_7b",
+    "llava_next_mistral_7b",
+]
+
+def _module(name: str):
+    # public ids use hyphens/dots (qwen2.5-32b); modules use underscores
+    name = name.lower().replace("-", "_").replace(".", "_")
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCHS}")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    return _module(name).reduced()

@@ -1,0 +1,18 @@
+"""llava-next-mistral-7b [hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+Backbone: mistral-7b — 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=32000.  Anyres vision frontend is a stub: input_specs provides
+precomputed patch embeddings (n_patch_tokens per sample)."""
+from dataclasses import replace
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b", family="vlm",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=32000, act="swiglu", norm="rms",
+    n_patch_tokens=576, rope_theta=1e6,
+)
+
+def reduced() -> ModelConfig:
+    return replace(CONFIG, name="llava-smoke", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                   n_patch_tokens=8)

@@ -1,0 +1,15 @@
+"""qwen2.5-32b [hf:Qwen/Qwen2.5-0.5B (family); hf]
+64L d_model=5120 40H (GQA kv=8) d_ff=27648 vocab=152064, QKV bias."""
+from dataclasses import replace
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-32b", family="dense",
+    n_layers=64, d_model=5120, n_heads=40, n_kv_heads=8,
+    d_ff=27648, vocab=152064, act="swiglu", norm="rms",
+    qkv_bias=True, rope_theta=1e6,
+)
+
+def reduced() -> ModelConfig:
+    return replace(CONFIG, name="qwen2.5-smoke", n_layers=2, d_model=80,
+                   n_heads=5, n_kv_heads=1, d_ff=160, vocab=256)

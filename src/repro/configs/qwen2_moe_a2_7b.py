@@ -1,0 +1,20 @@
+"""qwen2-moe-a2.7b [hf:Qwen/Qwen1.5-MoE-A2.7B; hf]
+24L d_model=2048 16H (GQA kv=16) d_ff=1408/expert, 60 routed top-4 + 4 shared
+(shared width 4*1408=5632), vocab 151936."""
+from dataclasses import replace
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b", family="moe",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab=151936, act="swiglu", norm="rms", qkv_bias=True,
+    moe=MoEConfig(n_experts=60, top_k=4, d_expert=1408,
+                  n_shared=4, d_shared=5632),
+)
+
+def reduced() -> ModelConfig:
+    return replace(
+        CONFIG, name="qwen2-moe-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=48, vocab=256,
+        moe=MoEConfig(n_experts=6, top_k=2, d_expert=48, n_shared=2, d_shared=96),
+    )

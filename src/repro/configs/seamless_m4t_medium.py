@@ -1,0 +1,17 @@
+"""seamless-m4t-medium [arXiv:2308.11596; hf]
+enc-dec, 12L encoder + 12L decoder, d_model=1024 16H (kv=16) d_ff=4096
+vocab=256206.  Audio frontend is a stub: input_specs provides precomputed
+frame embeddings."""
+from dataclasses import replace
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium", family="audio",
+    n_layers=12, n_encoder_layers=12, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab=256206, act="geglu", norm="ln",
+)
+
+def reduced() -> ModelConfig:
+    return replace(CONFIG, name="seamless-smoke", n_layers=2,
+                   n_encoder_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+                   d_ff=128, vocab=256)

@@ -1,0 +1,207 @@
+"""Code generation for StitchIR graphs.
+
+Three consumers share the single node evaluator below:
+
+* :func:`build_reference_fn` — pure-jnp executor for a whole graph.  Running
+  it under ``jax.jit`` is the **XLA baseline** execution mode; running each
+  node as its own jitted callable is the **unfused ("TensorFlow") baseline**.
+  It is also the numerical oracle every generated kernel is tested against.
+* the **Pallas stitched-kernel emitter** (:mod:`repro.kernels.stitched`) —
+  evaluates the same nodes *inside* a kernel body on block values.
+* :func:`emit_source` — renders the kernel a template would generate as
+  readable Pallas-style Python (the paper's CUDA-C emitter had the same
+  diagnosis role, §5.5).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .ir import Graph, OpKind, OpNode
+from .pattern import FusionPattern
+from .templates import Template
+
+__all__ = ["EW_OPS", "eval_node", "build_reference_fn", "build_per_op_fns", "emit_source"]
+
+
+# -- elementwise vocabulary --------------------------------------------------
+
+EW_OPS: dict[str, Callable] = {
+    "add": lax.add,
+    "sub": lax.sub,
+    "mul": lax.mul,
+    "div": lax.div,
+    "max": lax.max,
+    "min": lax.min,
+    "pow": lax.pow,
+    "neg": lax.neg,
+    "exp": lax.exp,
+    "log": lax.log,
+    "log1p": lax.log1p,
+    "tanh": lax.tanh,
+    "sqrt": lax.sqrt,
+    "rsqrt": lax.rsqrt,
+    "abs": lax.abs,
+    "sign": lax.sign,
+    "erf": lax.erf,
+    "square": lambda x: x * x,
+    "sigmoid": jax.nn.sigmoid,
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "softplus": jax.nn.softplus,
+    "select": lambda c, a, b: jnp.where(c, a, b),
+    "ge": lambda a, b: (a >= b).astype(a.dtype),
+    "gt": lambda a, b: (a > b).astype(a.dtype),
+    "le": lambda a, b: (a <= b).astype(a.dtype),
+    "lt": lambda a, b: (a < b).astype(a.dtype),
+    "eq": lambda a, b: (a == b).astype(a.dtype),
+}
+
+_REDUCERS = {
+    "sum": jnp.sum,
+    "max": jnp.max,
+    "min": jnp.min,
+    "prod": jnp.prod,
+    "mean": jnp.mean,
+}
+
+
+def eval_node(node: OpNode, operands: list, g: Graph | None = None):
+    """Evaluate one StitchIR node on concrete/traced jnp values."""
+    k = node.kind
+    if k is OpKind.ELEMENTWISE:
+        op = node.attrs["op"]
+        if op == "convert":
+            return operands[0].astype(node.dtype)
+        fn = EW_OPS.get(op)
+        if fn is None:
+            raise NotImplementedError(f"elementwise op {op!r}")
+        # numpy-style broadcasting between operands of different ranks
+        return fn(*operands)
+    if k is OpKind.BROADCAST:
+        return lax.broadcast_in_dim(
+            operands[0], node.shape, tuple(node.attrs["bcast_dims"])
+        )
+    if k is OpKind.RESHAPE:
+        return jnp.reshape(operands[0], node.shape)
+    if k is OpKind.TRANSPOSE:
+        return jnp.transpose(operands[0], tuple(node.attrs["perm"]))
+    if k is OpKind.SLICE:
+        return lax.slice(operands[0], node.attrs["starts"], node.attrs["limits"],
+                         node.attrs.get("strides"))
+    if k is OpKind.REDUCTION:
+        red = _REDUCERS[node.attrs.get("op", "sum")]
+        return red(
+            operands[0],
+            axis=tuple(node.attrs["axes"]),
+            keepdims=bool(node.attrs.get("keepdims", False)),
+        )
+    if k in (OpKind.GEMM, OpKind.BATCHED_GEMM):
+        contract = tuple(tuple(d) for d in node.attrs["contract"])
+        batch = tuple(tuple(d) for d in node.attrs.get("batch", ((), ())))
+        return lax.dot_general(
+            operands[0], operands[1], dimension_numbers=(contract, batch),
+            preferred_element_type=jnp.dtype(node.dtype),
+        )
+    if k is OpKind.GATHER:
+        table, idx = operands
+        return jnp.take(table, idx.astype(jnp.int32), axis=0)
+    if k is OpKind.TUPLE:
+        return tuple(operands)
+    if k is OpKind.CUSTOM:
+        if "project" in node.attrs:
+            return operands[0][node.attrs["project"]]
+        fn = node.attrs.get("eval_fn")
+        if fn is not None:
+            return fn(*operands)
+    raise NotImplementedError(f"cannot evaluate node kind {k}")
+
+
+def source_value(node: OpNode, inputs: Mapping[str, jax.Array] | None = None):
+    """Resolve a PARAMETER/CONSTANT node to a value: explicit input first,
+    then the constant payload captured at trace time."""
+    if inputs is not None and node.name in inputs:
+        return jnp.asarray(inputs[node.name], dtype=node.dtype)
+    if node.kind is OpKind.CONSTANT and "value" in node.attrs:
+        return jnp.asarray(node.attrs["value"], dtype=node.dtype)
+    raise KeyError(f"missing input {node.name!r}")
+
+
+def build_reference_fn(g: Graph) -> Callable[[Mapping[str, jax.Array]], dict]:
+    """Whole-graph executor: {param/const name: array} -> {output name: array}."""
+    topo = g.topo_order()
+
+    def run(inputs: Mapping[str, jax.Array]) -> dict:
+        env: dict[str, jax.Array] = {}
+        for name in topo:
+            node = g[name]
+            if node.is_source():
+                env[name] = source_value(node, inputs)
+            else:
+                env[name] = eval_node(node, [env[o] for o in node.operands], g)
+        return {o: env[o] for o in g.outputs}
+
+    return run
+
+
+def build_per_op_fns(g: Graph) -> dict[str, Callable]:
+    """One jitted callable per compute node — the unfused baseline: running
+    the graph this way dispatches exactly one 'kernel' per op."""
+    fns: dict[str, Callable] = {}
+    for node in g.compute_nodes():
+        def fn(*operands, _node=node):
+            return eval_node(_node, list(operands), g)
+        fns[node.name] = jax.jit(fn)
+    return fns
+
+
+# -- source emitter -----------------------------------------------------------
+
+def emit_source(p: FusionPattern, template: Template, name: str = "stitched") -> str:
+    """Render the kernel `template` implies for pattern `p` as readable
+    Pallas-style Python — the diagnosis artifact (paper's CUDAEmitter role)."""
+    g = p.graph
+    ins = p.external_inputs
+    outs = p.external_outputs
+    lines = [
+        f"# stitched kernel: {len(p.compute_members)} ops, class={p.pattern_class}",
+        f"# template: {template}",
+        f"def {name}_kernel({', '.join(i + '_ref' for i in ins)},",
+        f"                  {', '.join(o + '_ref' for o in outs)}, *scratch):",
+    ]
+    scratch_ops = set(template.scratch_ops)
+    for i in ins:
+        lines.append(f"    {i} = {i}_ref[...]  # HBM->VMEM block load")
+    for node in p.nodes:
+        if node.is_source() or node.name in ins:
+            continue
+        sched = template.schedule_for(node.name)
+        how = f"  # [{sched and ','.join(str(a) for a in sched.attrs)}]"
+        args = ", ".join(node.operands)
+        if node.kind is OpKind.ELEMENTWISE:
+            expr = f"ew.{node.attrs['op']}({args})"
+        elif node.kind is OpKind.REDUCTION:
+            expr = f"jnp.{node.attrs.get('op','sum')}({args}, axis={tuple(node.attrs['axes'])})"
+        elif node.kind in (OpKind.GEMM, OpKind.BATCHED_GEMM):
+            expr = f"jnp.dot({args})  # MXU"
+        elif node.kind is OpKind.BROADCAST:
+            expr = f"broadcast_in_dim({args}, {node.shape}, {tuple(node.attrs['bcast_dims'])})"
+        elif node.kind is OpKind.RESHAPE:
+            expr = f"{args}.reshape({node.shape})"
+        elif node.kind is OpKind.TRANSPOSE:
+            expr = f"{args}.transpose({tuple(node.attrs['perm'])})"
+        else:
+            expr = f"<{node.kind.value}>({args})"
+        lines.append(f"    {node.name} = {expr}{how}")
+        if node.name in scratch_ops:
+            lines.append(f"    scratch_{node.name}[...] = {node.name}  # VMEM scratch (S)")
+            lines.append(f"    {node.name} = scratch_{node.name}[...]")
+    for o in outs:
+        lines.append(f"    {o}_ref[...] = {o}  # VMEM->HBM store")
+    return "\n".join(lines) + "\n"

@@ -1,0 +1,279 @@
+"""StitchCompiler — the public optimize-and-execute API (paper Fig. 2).
+
+Pipeline:   graph -> pattern generation (§4.2) -> cost scoring (§4.3)
+          -> ILP + cycle cuts (§4.1) -> per-group kernel tuning (Alg. 3)
+          -> executable.
+
+Three execution modes reproduce the paper's comparison axes:
+
+* ``mode="off"``    — one kernel per op ("TensorFlow" baseline),
+* ``mode="xla"``    — XLA-style fusion: connected elementwise/row-reduction
+                      chains only, no packing, no gemm stitching,
+* ``mode="stitch"`` — full FusionStitching.
+
+The compiled object reports the statistics the paper's tables are built
+from: kernel counts per mode (Table 3's compression ratios), modeled step
+times (Table 3 speedups), pattern-class composition (Fig. 6), and scratch
+allocation statistics (Table 4).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from .codegen import build_reference_fn, eval_node
+from .cost import CostModel, HardwareModel, PatternScore, TPU_V5E
+from .fusiongen import GenConfig, generate_patterns, substitution_fusion
+from .ilp import PlanResult, solve_fusion_plan
+from .ir import Graph, OpKind
+from .pattern import FusionPattern
+from .scratch import ScratchPlan
+from .tuner import TemplateTuner, TunedKernel
+
+__all__ = ["StitchCompiler", "CompiledGraph", "FusionStats", "xla_like_groups"]
+
+
+# ---------------------------------------------------------------------------
+# XLA-baseline grouping (thread composition only)
+# ---------------------------------------------------------------------------
+
+_XLA_FUSIBLE = {
+    OpKind.ELEMENTWISE,
+    OpKind.BROADCAST,
+    OpKind.RESHAPE,
+    OpKind.TRANSPOSE,
+    OpKind.SLICE,
+}
+
+
+def xla_like_groups(g: Graph) -> list[frozenset[str]]:
+    """Greedy XLA-ish loop fusion: a producer is fused into its consumer when
+    the producer is elementwise glue and *all* of its users land in the same
+    group (duplication-free single-output fusion); row reductions may root a
+    group (input fusion).  No packing of independent ops, no gemm members —
+    exactly the capability gap the paper exploits (§1, §7)."""
+    group_of: dict[str, int] = {}
+    groups: dict[int, set[str]] = {}
+    opaque: dict[int, bool] = {}   # group rooted at a non-loop op (gemm etc.)
+    nxt = 0
+    # walk reverse-topo: consumers first
+    for name in reversed(g.topo_order()):
+        node = g[name]
+        if node.is_source() or node.kind is OpKind.TUPLE:
+            continue
+        fusible = node.kind in _XLA_FUSIBLE or (
+            node.kind is OpKind.REDUCTION and node.reduce_kind.value == "row"
+        )
+        placed = False
+        if fusible and name not in g.outputs:
+            users = [u for u in g.users(name) if not g[u].is_source()]
+            ugroups = {group_of.get(u) for u in users}
+            if len(ugroups) == 1 and None not in ugroups and users:
+                gid = ugroups.pop()
+                # loop fusion only merges into loop-fusion groups — never
+                # into a GEMM/custom kernel — and reductions stay roots.
+                if node.kind is not OpKind.REDUCTION and not opaque[gid]:
+                    groups[gid].add(name)
+                    group_of[name] = gid
+                    placed = True
+        if not placed:
+            groups[nxt] = {name}
+            group_of[name] = nxt
+            opaque[nxt] = not fusible and node.kind is not OpKind.REDUCTION
+            nxt += 1
+    return [frozenset(v) for v in groups.values()]
+
+
+# ---------------------------------------------------------------------------
+# compiled artifact
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FusionStats:
+    mode: str
+    n_ops: int                       # compute ops in the graph ("TF kernels")
+    n_kernels: int                   # kernels after this mode's fusion
+    pattern_classes: dict[str, int] = field(default_factory=dict)
+    modeled_time: float = 0.0        # cost-model step time, seconds
+    scratch_requested: int = 0
+    scratch_allocated: int = 0
+    patterns_with_scratch: int = 0
+    pallas_groups: int = 0           # groups executed as stitched Pallas
+    ilp: PlanResult | None = None
+
+    @property
+    def compression(self) -> float:
+        return self.n_ops / self.n_kernels if self.n_kernels else float("nan")
+
+    @property
+    def alloc_over_req(self) -> float:
+        if not self.scratch_requested:
+            return 1.0
+        return self.scratch_allocated / self.scratch_requested
+
+
+@dataclass
+class _Group:
+    members: frozenset[str]
+    kind: str                        # "pallas" | "jnp" | "op"
+    tuned: TunedKernel | None = None
+
+
+class CompiledGraph:
+    """Executable produced by :class:`StitchCompiler`.
+
+    Calling it runs the graph group-by-group (each group = one kernel):
+    stitched groups through their Pallas callable, the rest through jnp.
+    """
+
+    def __init__(self, g: Graph, groups: list[_Group], stats: FusionStats):
+        self.graph = g
+        self.groups = groups
+        self.stats = stats
+        self._order = self._schedule()
+
+    def _schedule(self) -> list[_Group]:
+        g = self.graph
+        owner: dict[str, int] = {}
+        for i, grp in enumerate(self.groups):
+            for m in grp.members:
+                owner[m] = i
+        indeg = [0] * len(self.groups)
+        succs: list[set[int]] = [set() for _ in self.groups]
+        for name, node in g.nodes.items():
+            if name not in owner:
+                continue
+            for o in node.operands:
+                if o in owner and owner[o] != owner[name]:
+                    if owner[name] not in succs[owner[o]]:
+                        succs[owner[o]].add(owner[name])
+                        indeg[owner[name]] += 1
+        ready = [i for i in range(len(self.groups)) if indeg[i] == 0]
+        order: list[int] = []
+        while ready:
+            cur = ready.pop(0)
+            order.append(cur)
+            for s in sorted(succs[cur]):
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    ready.append(s)
+        assert len(order) == len(self.groups), "cyclic group schedule"
+        return [self.groups[i] for i in order]
+
+    def __call__(self, inputs: Mapping[str, jax.Array]) -> dict[str, jax.Array]:
+        from .codegen import source_value
+
+        g = self.graph
+        env: dict[str, jax.Array] = {}
+        for name, node in g.nodes.items():
+            if node.is_source():
+                env[name] = source_value(node, inputs)
+        for grp in self._order:
+            if grp.kind == "pallas" and grp.tuned and grp.tuned.callable:
+                p = grp.tuned.pattern
+                args = [env[i] for i in p.external_inputs]
+                outs = grp.tuned.callable(*args)
+                for nm, val in zip(p.external_outputs, outs):
+                    env[nm] = val
+            else:
+                # fused-jnp group: evaluate members in topo order
+                topo = [n for n in g.topo_order() if n in grp.members]
+                for nm in topo:
+                    node = g[nm]
+                    env[nm] = eval_node(node, [env[o] for o in node.operands], g)
+        return {o: env[o] for o in g.outputs}
+
+
+# ---------------------------------------------------------------------------
+# the compiler
+# ---------------------------------------------------------------------------
+
+class StitchCompiler:
+    def __init__(
+        self,
+        hw: HardwareModel = TPU_V5E,
+        mode: str = "stitch",
+        gen_cfg: GenConfig | None = None,
+        execution_based_eval: bool = False,
+        use_pallas: bool = True,
+    ):
+        assert mode in ("off", "xla", "stitch")
+        self.hw = hw
+        self.mode = mode
+        self.gen_cfg = gen_cfg or GenConfig()
+        self.cost = CostModel(hw)
+        self.tuner = TemplateTuner(hw, execution_based=execution_based_eval)
+        self.use_pallas = use_pallas
+
+    # -- planning -------------------------------------------------------------
+    def plan(self, g: Graph) -> tuple[list[FusionPattern], PlanResult | None]:
+        if self.mode == "off":
+            return [], None
+        if self.mode == "xla":
+            pats = [
+                FusionPattern(g, grp, "xla")
+                for grp in xla_like_groups(g)
+                if len(grp) >= 2
+            ]
+            return pats, None
+        patterns = generate_patterns(g, self.gen_cfg)
+        scores = [self.cost.score(p).score for p in patterns]
+        result = solve_fusion_plan(g, patterns, scores)
+        return result.chosen, result
+
+    # -- modeled whole-graph time (Table 3's perf metric) ----------------------
+    def modeled_time(self, g: Graph, groups: list[frozenset[str]]) -> float:
+        total = 0.0
+        for members in groups:
+            if len(members) == 1:
+                (m,) = members
+                total += self.cost.kernel_time(g, m) + self.hw.launch_latency
+            else:
+                p = FusionPattern(g, members)
+                total += self.cost.fused_time(p) + self.hw.launch_latency
+        return total
+
+    def compile(self, g: Graph) -> CompiledGraph:
+        g.validate()
+        chosen, ilp = self.plan(g)
+        covered: set[str] = set()
+        for p in chosen:
+            covered |= p.members
+
+        groups: list[_Group] = []
+        stats = FusionStats(
+            mode=self.mode, n_ops=len(g.compute_nodes()), n_kernels=0, ilp=ilp
+        )
+
+        for p in chosen:
+            stats.pattern_classes[p.pattern_class] = (
+                stats.pattern_classes.get(p.pattern_class, 0) + 1
+            )
+            tuned = None
+            if self.mode == "stitch" and self.use_pallas:
+                tuned = self.tuner.tune(p)
+            if tuned is not None:
+                groups.append(_Group(p.members, "pallas", tuned))
+                stats.pallas_groups += 1
+                stats.scratch_requested += sum(
+                    self.cost.scratch_request(p).values()
+                )
+                stats.scratch_allocated += tuned.scratch_plan.allocated
+                if tuned.scratch_plan.allocated:
+                    stats.patterns_with_scratch += 1
+            else:
+                groups.append(_Group(p.members, "jnp"))
+
+        # singleton groups for uncovered compute ops
+        for node in g.compute_nodes():
+            if node.name not in covered:
+                groups.append(_Group(frozenset([node.name]), "op"))
+
+        stats.n_kernels = len(groups)
+        stats.modeled_time = self.modeled_time(g, [grp.members for grp in groups])
+        return CompiledGraph(g, groups, stats)

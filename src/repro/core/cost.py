@@ -1,0 +1,215 @@
+"""Cost model (paper §4.3) adapted to TPU.
+
+Two evaluation paths, as in the paper:
+
+* **model-based** — fast analytic score used for most patterns:
+      f(P) = M(V_saved) + (N-1) * phi
+  where M(V) extrapolates the latency of moving V bytes through HBM using an
+  offline bandwidth-utilization curve (paper Fig. 4: small transfers do not
+  saturate the memory system), and phi is the per-kernel dispatch overhead.
+
+* **execution-based** — measure the generated kernel directly:
+      f(P) = sum_j K(Op_j) + (N-1) * phi - K(P)
+  On this CPU container "execution" means timing the interpret-mode Pallas
+  kernel / jitted reference, which preserves *relative* ordering for the
+  plan-selection decisions the paper makes with it; the tuner (Alg. 3) uses
+  it for the complex-pattern class exactly as §4.3 prescribes.
+
+Hardware presets: ``V100`` validates the cost model against the paper's own
+environment; ``TPU_V5E`` is the deployment target used everywhere else.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from .ir import Graph, OpKind
+from .pattern import FusionPattern
+
+__all__ = ["HardwareModel", "V100", "TPU_V5E", "CostModel", "PatternScore"]
+
+
+@dataclass(frozen=True)
+class HardwareModel:
+    name: str
+    hbm_bw: float            # bytes/s, peak
+    peak_flops: float        # FLOP/s (matmul-precision)
+    launch_latency: float    # phi, seconds per kernel dispatch
+    onchip_budget: int       # bytes of scratch (GPU shared mem / TPU VMEM)
+    # bandwidth-utilization curve (paper Fig. 4): transfer of V bytes runs at
+    # eff(V) * hbm_bw.  Modeled as a saturating curve with half-utilization
+    # point `bw_half` bytes, calibrated offline.
+    bw_half: float = 1 << 17
+    # interconnect for the roofline/collective term (per-chip, all links)
+    ici_bw: float = 0.0
+
+    def efficiency(self, nbytes: float) -> float:
+        if nbytes <= 0:
+            return 1.0
+        return nbytes / (nbytes + self.bw_half)
+
+    def mem_time(self, nbytes: float) -> float:
+        """M(V): latency to move V bytes at utilization-scaled bandwidth."""
+        if nbytes <= 0:
+            return 0.0
+        return nbytes / (self.hbm_bw * self.efficiency(nbytes))
+
+    def flops_time(self, flops: float) -> float:
+        return flops / self.peak_flops if flops > 0 else 0.0
+
+
+V100 = HardwareModel(
+    name="V100",
+    hbm_bw=900e9,
+    peak_flops=15.7e12,          # fp32 FMA; the paper's workloads are fp32
+    launch_latency=8e-6,         # paper: phi between 6 and 10 us
+    onchip_budget=96 * 1024,     # shared memory per SM (opt-in 96KB on Volta)
+    bw_half=1 << 18,
+    ici_bw=150e9,                # NVLink aggregate (unused by fusion scoring)
+)
+
+TPU_V5E = HardwareModel(
+    name="TPU_V5E",
+    hbm_bw=819e9,
+    peak_flops=197e12,           # bf16
+    launch_latency=2e-6,         # XLA static-schedule dispatch, no driver
+    onchip_budget=16 * 1024 * 1024,  # conservative usable VMEM scratch
+    bw_half=1 << 17,
+    ici_bw=3 * 2 * 50e9,         # 3 links x 2 directions x 50 GB/s
+)
+
+
+@dataclass
+class PatternScore:
+    pattern: FusionPattern
+    score: float               # seconds saved; the ILP objective weight f(P)
+    feasible: bool
+    reason: str = ""
+    scratch_request: int = 0   # worst-case on-chip bytes before Alg.4 reuse
+    saved_bytes: int = 0
+    kernels_removed: int = 0
+
+
+class CostModel:
+    """Scores fusion patterns; enforces the paper's feasibility gates."""
+
+    def __init__(self, hw: HardwareModel = TPU_V5E):
+        self.hw = hw
+
+    # -- per-op kernel-time model -------------------------------------------
+    def op_bytes(self, g: Graph, name: str) -> int:
+        node = g[name]
+        in_b = sum(g[o].bytes for o in node.operands)
+        return in_b + node.bytes
+
+    def gemm_flops(self, g: Graph, name: str) -> float:
+        node = g[name]
+        if node.kind not in (OpKind.GEMM, OpKind.BATCHED_GEMM):
+            return 0.0
+        lhs = g[node.operands[0]]
+        k = math.prod(lhs.shape[d] for d in node.attrs["contract"][0])
+        return 2.0 * node.size * k
+
+    def kernel_time(self, g: Graph, name: str) -> float:
+        """K(Op): standalone kernel execution time for one op (roofline max
+        of its memory and compute terms) — the unfused baseline cost."""
+        node = g[name]
+        if node.is_source() or node.kind is OpKind.TUPLE:
+            return 0.0
+        mem = self.hw.mem_time(self.op_bytes(g, name))
+        comp = 0.0
+        if node.kind in (OpKind.GEMM, OpKind.BATCHED_GEMM):
+            comp = self.hw.flops_time(self.gemm_flops(g, name))
+        elif node.kind is OpKind.REDUCTION:
+            comp = self.hw.flops_time(float(g[node.operands[0]].size))
+        elif node.kind is OpKind.ELEMENTWISE:
+            comp = self.hw.flops_time(float(node.size) * max(1, len(node.operands)))
+        return max(mem, comp)
+
+    def fused_time(self, p: FusionPattern) -> float:
+        """K(P): modeled execution of the fused kernel — external I/O moves
+        through HBM once; internal edges live on-chip; compute unchanged."""
+        g = p.graph
+        io_bytes = p.input_bytes + p.output_bytes
+        mem = self.hw.mem_time(io_bytes)
+        comp = 0.0
+        for n in p.compute_members:
+            if n.kind in (OpKind.GEMM, OpKind.BATCHED_GEMM):
+                comp += self.hw.flops_time(self.gemm_flops(g, n.name))
+            else:
+                comp += self.hw.flops_time(float(n.size))
+        return max(mem, comp)
+
+    # -- scratch requirement (pre-Alg.4) ------------------------------------
+    def scratch_request(self, p: FusionPattern) -> dict[str, int]:
+        """Bytes of on-chip transfer storage each member would request.
+
+        Mirrors §5: intermediates crossing a *composition boundary* (produced
+        by a reduction/gemm member, or consumed by one) need block-level
+        scratch (GPU shared / TPU VMEM); pure elementwise chains stay in
+        registers (VREG) and request nothing.
+        """
+        g = p.graph
+        req: dict[str, int] = {}
+        heavy = {OpKind.REDUCTION, OpKind.GEMM, OpKind.BATCHED_GEMM}
+        for n in p.compute_members:
+            internal_users = [u for u in g.users(n.name) if u in p.members]
+            if not internal_users:
+                continue
+            crosses = n.kind in heavy or any(g[u].kind in heavy for u in internal_users)
+            if crosses:
+                # per-block tile of the intermediate: bounded by one row-block
+                # (minor-most dim x 8 sublanes) or the whole tensor if small
+                tile = min(n.bytes, self._tile_bytes(n))
+                req[n.name] = tile
+        return req
+
+    def _tile_bytes(self, node) -> int:
+        """One (8, minor) VMEM tile of the tensor (the per-block working set a
+        block-composition schedule holds on-chip at a time)."""
+        if not node.shape:
+            return node.bytes
+        minor = node.shape[-1]
+        rows = 8 if len(node.shape) > 1 else 1
+        return minor * rows * (node.bytes // max(node.size, 1))
+
+    # -- the paper's two scoring paths ---------------------------------------
+    def score_model_based(self, p: FusionPattern) -> PatternScore:
+        n_kernels = len(p.compute_members)
+        if n_kernels < 2:
+            return PatternScore(p, -1.0, False, "singleton", 0, 0, 0)
+        req = self.scratch_request(p)
+        total_req = sum(req.values())
+        if total_req > self.hw.onchip_budget:
+            return PatternScore(
+                p, -1.0, False,
+                f"scratch {total_req}B exceeds budget {self.hw.onchip_budget}B",
+                total_req, 0, 0,
+            )
+        saved = p.saved_bytes
+        score = self.hw.mem_time(saved) + (n_kernels - 1) * self.hw.launch_latency
+        return PatternScore(p, score, True, "model", total_req, saved, n_kernels - 1)
+
+    def score_execution_based(self, p: FusionPattern, measured_fused: float | None = None) -> PatternScore:
+        n_kernels = len(p.compute_members)
+        if n_kernels < 2:
+            return PatternScore(p, -1.0, False, "singleton", 0, 0, 0)
+        req = self.scratch_request(p)
+        total_req = sum(req.values())
+        if total_req > self.hw.onchip_budget:
+            return PatternScore(p, -1.0, False, "scratch over budget", total_req, 0, 0)
+        unfused = sum(self.kernel_time(p.graph, n.name) for n in p.compute_members)
+        fused = measured_fused if measured_fused is not None else self.fused_time(p)
+        score = unfused + (n_kernels - 1) * self.hw.launch_latency - fused
+        feasible = score >= 0
+        return PatternScore(
+            p, score, feasible, "execution", total_req, p.saved_bytes, n_kernels - 1
+        )
+
+    # -- dispatch rule (§4.3: model-based for most, execution for complex) ---
+    def score(self, p: FusionPattern) -> PatternScore:
+        complex_pattern = p.pattern_class == "gemm" or len(p.reduce_kinds) > 1
+        if complex_pattern:
+            return self.score_execution_based(p)
+        return self.score_model_based(p)

@@ -1,0 +1,200 @@
+"""Fusion-pattern generation — the paper's §4.2.
+
+Two domain-specific searches produce the candidate set the ILP chooses from:
+
+* :func:`substitution_fusion` (Alg. 1) — topo-sort the graph, collapse every
+  run of ops between adjacent *partition ops* into one pattern.  Driven by
+  :func:`multi_step_substitution`, which widens the partition-op set in the
+  paper's order (large GEMMs -> batched-GEMMs -> column reductions -> scalar
+  reductions), collecting patterns at every step.
+
+* :func:`exploratory_fusion` (Alg. 2) — recursive producer/consumer expansion
+  from seed patterns, gated by the two fusibility conditions: member kinds
+  restricted to elementwise / reduction / batched-gemm (+ shape glue), and no
+  cyclic data dependence after contraction.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .ir import Graph, OpKind, OpNode, ReduceKind
+from .pattern import FusionPattern, contraction_creates_cycle
+
+__all__ = [
+    "GenConfig",
+    "substitution_fusion",
+    "multi_step_substitution",
+    "exploratory_fusion",
+    "generate_patterns",
+]
+
+# kinds that may always live inside a fused kernel
+_FUSIBLE_GLUE = {
+    OpKind.ELEMENTWISE,
+    OpKind.BROADCAST,
+    OpKind.RESHAPE,
+    OpKind.TRANSPOSE,
+    OpKind.SLICE,
+}
+_FUSIBLE_EXPLORE = _FUSIBLE_GLUE | {OpKind.REDUCTION, OpKind.BATCHED_GEMM}
+
+
+@dataclass
+class GenConfig:
+    # §4.2.1 — a GEMM is "large" (left to the native library / MXU pipeline)
+    # when its FLOPs exceed this; small ones are stitched. cuBLAS rule -> MXU rule.
+    large_gemm_flops: float = 2.0e9
+    # §4.2.2 seed heuristics
+    max_operands: int = 10           # ops with more operands are never seeds
+    seed_min_bytes: int = 1 << 20    # "large input/output tensors"
+    # exploration budget ("if it still takes long, give up")
+    max_patterns: int = 4000
+    max_pattern_size: int = 64
+    max_depth: int = 12
+
+
+def _gemm_flops(g: Graph, node: OpNode) -> float:
+    import math
+
+    lhs = g[node.operands[0]]
+    k = math.prod(lhs.shape[d] for d in node.attrs["contract"][0])
+    return 2.0 * node.size * k
+
+
+def _is_partition_op(g: Graph, node: OpNode, step: int, cfg: GenConfig) -> bool:
+    """Paper's multi-step widening: step 0 partitions on large GEMMs only;
+    each later step *removes* a class from the partition set (i.e. allows it
+    to fuse).  Order: large gemm | batched-gemm | column reductions | scalar
+    reductions.  CUSTOM/GATHER/SCATTER ops always partition (opaque)."""
+    if node.kind in (OpKind.CUSTOM, OpKind.GATHER, OpKind.SCATTER):
+        return True
+    if node.kind is OpKind.SLICE:
+        return False
+    if node.kind is OpKind.GEMM:
+        return _gemm_flops(g, node) >= cfg.large_gemm_flops or step < 1
+    if node.kind is OpKind.BATCHED_GEMM:
+        return step < 1
+    if node.kind is OpKind.REDUCTION:
+        rk = node.reduce_kind
+        if rk is ReduceKind.COLUMN:
+            return step < 2
+        if rk is ReduceKind.SCALAR:
+            return step < 3
+        return False  # row reductions always fusible
+    return False
+
+
+def substitution_fusion(
+    g: Graph, partition: set[str], origin: str = "substitution",
+) -> list[FusionPattern]:
+    """Alg. 1: collapse all ops between adjacent partition ops (in topo order)
+    into a single pattern each."""
+    topo = g.topo_order()
+    patterns: list[FusionPattern] = []
+    run: list[str] = []
+
+    def flush():
+        nonlocal run
+        members = [
+            m for m in run
+            if not g[m].is_source() and g[m].kind is not OpKind.TUPLE
+        ]
+        if len(members) >= 2:
+            patterns.append(FusionPattern(g, frozenset(members), origin))
+        run = []
+
+    for name in topo:
+        if name in partition:
+            flush()
+        else:
+            run.append(name)
+    flush()
+    return patterns
+
+
+def multi_step_substitution(g: Graph, cfg: GenConfig) -> list[FusionPattern]:
+    """§4.2.1 multi-step procedure: run Alg. 1 once per widening step."""
+    out: list[FusionPattern] = []
+    seen: set[frozenset[str]] = set()
+    for step in range(4):
+        partition = {
+            n.name for n in g.nodes.values() if _is_partition_op(g, n, step, cfg)
+        }
+        for p in substitution_fusion(g, partition):
+            if p.members not in seen and not p.creates_cycle():
+                seen.add(p.members)
+                out.append(p)
+    return out
+
+
+def _explore_fusible(g: Graph, name: str) -> bool:
+    node = g[name]
+    return node.kind in _FUSIBLE_EXPLORE
+
+
+def exploratory_fusion(
+    g: Graph, seeds: list[frozenset[str]] | None = None, cfg: GenConfig | None = None,
+) -> list[FusionPattern]:
+    """Alg. 2 with the paper's seed heuristics and a search budget."""
+    cfg = cfg or GenConfig()
+    if seeds is None:
+        seeds = []
+        for node in g.nodes.values():
+            if node.kind not in (OpKind.ELEMENTWISE, OpKind.REDUCTION, OpKind.BATCHED_GEMM):
+                continue
+            if len(node.operands) > cfg.max_operands:
+                continue
+            io = node.bytes + sum(g[o].bytes for o in node.operands)
+            if io < cfg.seed_min_bytes:
+                continue
+            seeds.append(frozenset([node.name]))
+
+    patterns: list[FusionPattern] = []
+    seen: set[frozenset[str]] = set()
+
+    def expand_candidates(members: frozenset[str]) -> list[str]:
+        cands: set[str] = set()
+        for m in members:
+            # ProducerExpansion
+            for o in g[m].operands:
+                if o not in members and _explore_fusible(g, o):
+                    cands.add(o)
+            # ConsumerExpansion
+            for u in g.users(m):
+                if u not in members and _explore_fusible(g, u):
+                    cands.add(u)
+        return sorted(cands)
+
+    def explore(members: frozenset[str], depth: int):
+        if len(patterns) >= cfg.max_patterns or depth > cfg.max_depth:
+            return
+        for cand in expand_candidates(members):
+            fused = members | {cand}
+            if fused in seen or len(fused) > cfg.max_pattern_size:
+                continue
+            seen.add(fused)
+            if contraction_creates_cycle(g, fused):
+                continue
+            if len(fused) >= 2:
+                patterns.append(FusionPattern(g, fused, "exploratory"))
+            if len(patterns) >= cfg.max_patterns:
+                return
+            explore(fused, depth + 1)
+
+    for s in seeds:
+        explore(s, 0)
+    return patterns
+
+
+def generate_patterns(g: Graph, cfg: GenConfig | None = None) -> list[FusionPattern]:
+    """§4.2 composition rule: substitution fusion is the base strategy,
+    exploratory fusion is supplementary."""
+    cfg = cfg or GenConfig()
+    out = multi_step_substitution(g, cfg)
+    seen = {p.members for p in out}
+    for p in exploratory_fusion(g, None, cfg):
+        if p.members not in seen:
+            seen.add(p.members)
+            out.append(p)
+    return out

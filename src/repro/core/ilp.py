@@ -1,0 +1,200 @@
+"""Fusion-plan ILP (paper §4.1) with iterative cycle-cut constraints (Fig. 3).
+
+The problem:   maximize  sum_j X_j * f(P_j)
+               s.t.      X_u + X_v <= 1   whenever P_u and P_v overlap
+                         X_j in {0, 1}
+plus lazily-added constraints forbidding plans whose contracted graph is
+cyclic.  This is weighted set packing.  Instance sizes after the paper's
+heuristics are modest (tens to a few thousand patterns), so we solve exactly
+with a best-first branch-and-bound whose bound is the LP-ish greedy residual;
+``pulp`` (the package the paper itself uses) is used as an optional
+cross-check in tests, never as a runtime dependency.
+
+Cycle handling mirrors Fig. 3(d): solve -> contract chosen patterns ->
+detect a cycle among contracted supernodes -> add a "not all of these
+together" cut -> re-solve, until acyclic.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+
+from .ir import Graph
+from .pattern import FusionPattern
+
+__all__ = ["ILPSolver", "solve_fusion_plan", "PlanResult"]
+
+
+@dataclass
+class PlanResult:
+    chosen: list[FusionPattern]
+    objective: float
+    iterations: int          # number of solve rounds (1 + cycle-cut rounds)
+    cuts_added: int
+    nodes_explored: int
+
+
+class ILPSolver:
+    """Exact best-first branch & bound for weighted set packing with
+    arbitrary 'at most k-1 of this set' cut constraints."""
+
+    def __init__(self, weights: list[float], overlaps: list[set[int]], node_budget: int = 200_000):
+        self.w = weights
+        self.overlaps = overlaps          # overlaps[i] = set of j conflicting with i
+        self.cuts: list[frozenset[int]] = []
+        self.node_budget = node_budget
+        self.nodes_explored = 0
+
+    def add_cut(self, idxs: frozenset[int]) -> None:
+        """Forbid selecting ALL of `idxs` simultaneously."""
+        self.cuts.append(idxs)
+
+    # -------------------------------------------------------------- solve --
+    def solve(self) -> tuple[list[int], float]:
+        n = len(self.w)
+        order = sorted(range(n), key=lambda i: -self.w[i])
+        # suffix upper bound: sum of remaining positive weights (ignores
+        # conflicts -> valid optimistic bound)
+        suffix = [0.0] * (n + 1)
+        for pos in range(n - 1, -1, -1):
+            suffix[pos] = suffix[pos + 1] + max(self.w[order[pos]], 0.0)
+
+        best_val = 0.0
+        best_sel: list[int] = []
+        self.nodes_explored = 0
+
+        # DFS with bounding (explicit stack; states: (pos, chosen, blocked, val))
+        stack = [(0, frozenset(), frozenset(), 0.0)]
+        while stack:
+            pos, chosen, blocked, val = stack.pop()
+            self.nodes_explored += 1
+            if self.nodes_explored > self.node_budget:
+                break  # return best found so far (budget guard; tested small)
+            if val > best_val:
+                best_val, best_sel = val, sorted(chosen)
+            if pos >= n or val + suffix[pos] <= best_val:
+                continue
+            i = order[pos]
+            # branch 1: skip i
+            stack.append((pos + 1, chosen, blocked, val))
+            # branch 2: take i (if feasible)
+            if i not in blocked and self.w[i] > 0:
+                new_chosen = chosen | {i}
+                if not self._violates_cut(new_chosen):
+                    new_blocked = blocked | self.overlaps[i]
+                    stack.append((pos + 1, new_chosen, new_blocked, val + self.w[i]))
+        return best_sel, best_val
+
+    def _violates_cut(self, chosen: frozenset[int]) -> bool:
+        return any(cut.issubset(chosen) for cut in self.cuts)
+
+
+# ---------------------------------------------------------------------------
+# plan-level driver: ILP + cycle detection loop
+# ---------------------------------------------------------------------------
+
+def _find_cycle_patterns(g: Graph, chosen: list[FusionPattern]) -> frozenset[int] | None:
+    """Detect a cycle in the graph contracted by `chosen`; return the indices
+    of the patterns participating in one cycle, or None if acyclic.
+
+    Contracted-graph nodes: one supernode per chosen pattern + one node per
+    remaining op.  Edge u->v iff some member/op of u feeds some member/op
+    of v."""
+    owner: dict[str, int] = {}
+    for idx, p in enumerate(chosen):
+        for m in p.members:
+            owner[m] = idx
+
+    def rep(name: str) -> tuple[str, int] | str:
+        return ("P", owner[name]) if name in owner else name
+
+    adj: dict[object, set[object]] = {}
+    for name, node in g.nodes.items():
+        dst = rep(name)
+        for o in node.operands:
+            src = rep(o)
+            if src != dst:
+                adj.setdefault(src, set()).add(dst)
+        adj.setdefault(dst, set())
+
+    # iterative DFS cycle detection, tracking the stack to extract the cycle
+    WHITE, GRAY, BLACK = 0, 1, 2
+    color = {v: WHITE for v in adj}
+    parent: dict[object, object] = {}
+    for root in list(adj):
+        if color[root] != WHITE:
+            continue
+        stack = [(root, iter(sorted(adj[root], key=repr)))]
+        color[root] = GRAY
+        while stack:
+            v, it = stack[-1]
+            advanced = False
+            for w in it:
+                if color[w] == WHITE:
+                    color[w] = GRAY
+                    parent[w] = v
+                    stack.append((w, iter(sorted(adj[w], key=repr))))
+                    advanced = True
+                    break
+                if color[w] == GRAY:
+                    # found cycle w -> ... -> v -> w ; collect pattern ids
+                    ids: set[int] = set()
+                    cur = v
+                    while True:
+                        if isinstance(cur, tuple) and cur[0] == "P":
+                            ids.add(cur[1])
+                        if cur == w:
+                            break
+                        cur = parent.get(cur)
+                        if cur is None:
+                            break
+                    if isinstance(w, tuple) and w[0] == "P":
+                        ids.add(w[1])
+                    if ids:
+                        return frozenset(ids)
+            if not advanced:
+                color[v] = BLACK
+                stack.pop()
+        # continue to next root
+    return None
+
+
+def solve_fusion_plan(
+    g: Graph,
+    patterns: list[FusionPattern],
+    scores: list[float],
+    max_cycle_rounds: int = 50,
+) -> PlanResult:
+    """The paper's full loop: ILP -> cycle check -> add cut -> re-solve."""
+    assert len(patterns) == len(scores)
+    keep = [i for i, s in enumerate(scores) if s > 0]
+    pats = [patterns[i] for i in keep]
+    w = [scores[i] for i in keep]
+
+    overlaps: list[set[int]] = [set() for _ in pats]
+    for i, j in itertools.combinations(range(len(pats)), 2):
+        if pats[i].overlaps(pats[j]):
+            overlaps[i].add(j)
+            overlaps[j].add(i)
+
+    solver = ILPSolver(w, overlaps)
+    cuts = 0
+    for rounds in range(1, max_cycle_rounds + 1):
+        sel, val = solver.solve()
+        chosen = [pats[i] for i in sel]
+        cyc = _find_cycle_patterns(g, chosen)
+        if cyc is None:
+            return PlanResult(chosen, val, rounds, cuts, solver.nodes_explored)
+        # map pattern positions in `chosen` back to solver indices
+        cut_idx = frozenset(sel[k] for k in range(len(sel)) if k in cyc)
+        if len(cut_idx) == 1:
+            # a single pattern whose contraction self-cycles can never be
+            # chosen (shouldn't happen: generators pre-filter, but be safe)
+            only = next(iter(cut_idx))
+            solver.w[only] = -1.0
+        else:
+            solver.add_cut(cut_idx)
+        cuts += 1
+    raise RuntimeError("cycle-cut loop did not converge")

@@ -1,0 +1,172 @@
+"""Kernel generation & tuning — the paper's Alg. 3.
+
+For a fusion pattern: enumerate implementation templates (different
+parallelization / scratch / launch trade-offs), run RegisterPlanning and
+SharedPlanning (volume + layout constraints; Alg. 4 reuse), generate the
+kernel per schedule kind, evaluate, keep the best.
+
+Evaluation is model-based by default (fast, the paper's JIT story) and
+execution-based on request (times the interpret-mode kernel — the "optimize
+once, run many times" offline path).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+from .cost import CostModel, HardwareModel, TPU_V5E
+from .ir import Graph, OpKind
+from .pattern import FusionPattern
+from .scratch import ScratchAllocator, ScratchPlan
+from .templates import Attr, Schedule, SubAttr, Template
+
+__all__ = ["TunedKernel", "TemplateTuner", "generate_templates"]
+
+
+@dataclass
+class TunedKernel:
+    pattern: FusionPattern
+    template: Template
+    scratch_plan: ScratchPlan
+    modeled_time: float
+    measured_time: float | None = None
+    backend: str = "pallas"     # "pallas" | "jnp" (fallback)
+    callable: Callable | None = field(default=None, repr=False)
+
+
+def _attrs_for_node(node, row_block: int, seq_small_reduce: bool) -> tuple[Attr, ...]:
+    """Default per-dimension tiling spec: rows -> GRID_<rb>, then trailing
+    dims map minor-most to LANE, second-minor to SUBLANE, others SEQ."""
+    rank = max(len(node.shape), 1)
+    attrs: list[Attr] = []
+    for d in range(rank):
+        if d == 0:
+            attrs.append(Attr((SubAttr("GRID", row_block),)))
+        elif d == rank - 1:
+            if (
+                seq_small_reduce
+                and node.kind is OpKind.REDUCTION
+                and node.shape
+                and node.shape[-1] < 128
+            ):
+                attrs.append(Attr((SubAttr("SEQ"),)))
+            else:
+                attrs.append(Attr((SubAttr("LANE"),)))
+        elif d == rank - 2:
+            attrs.append(Attr((SubAttr("SUBLANE"),)))
+        else:
+            attrs.append(Attr((SubAttr("SEQ"),)))
+    return tuple(attrs)
+
+
+def generate_templates(
+    p: FusionPattern, cost: CostModel, max_templates: int = 12
+) -> list[Template]:
+    """TemplatesGeneration: row-block sweep x scratch-storage choice.
+
+    Scratch choice: heavy-crossing intermediates (the cost model's
+    scratch_request set) either all go to VMEM (block composition) or stay in
+    VREG (thread composition) when small enough; both variants are emitted so
+    KernelEvalUpdate can pick.
+    """
+    from repro.kernels.stitched import StitchInfeasible, analyze_pattern
+
+    try:
+        ana = analyze_pattern(p)
+    except StitchInfeasible:
+        return []
+    req = cost.scratch_request(p)
+    templates: list[Template] = []
+    scratch_variants = [tuple(sorted(req))] if req else [()]
+    if req:
+        scratch_variants.append(())  # VREG-only variant
+    for rb in ana.feasible_blocks:
+        for scratch in scratch_variants:
+            scheds = []
+            for node in p.compute_members:
+                scheds.append(
+                    Schedule(
+                        node.name,
+                        _attrs_for_node(node, rb, seq_small_reduce=False),
+                        scratch=node.name in scratch,
+                    )
+                )
+            templates.append(Template(tuple(scheds)))
+            if len(templates) >= max_templates:
+                return templates
+    return templates
+
+
+class TemplateTuner:
+    """Alg. 3 driver."""
+
+    def __init__(self, hw: HardwareModel = TPU_V5E, execution_based: bool = False):
+        self.hw = hw
+        self.cost = CostModel(hw)
+        self.execution_based = execution_based
+
+    # -- SharedPlanning -------------------------------------------------------
+    def shared_planning(self, p: FusionPattern, template: Template) -> ScratchPlan | None:
+        req_all = self.cost.scratch_request(p)
+        req = {k: v for k, v in req_all.items() if k in set(template.scratch_ops)}
+        plan = ScratchAllocator(p.graph).allocate(req)
+        if plan.allocated > self.hw.onchip_budget:    # volume constraint
+            return None
+        return plan
+
+    # -- KernelEvalUpdate -----------------------------------------------------
+    def _measure(self, fn: Callable, args: list, repeats: int = 3) -> float:
+        fn(*args)  # warmup (trace+compile)
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            out = fn(*args)
+            import jax
+
+            jax.block_until_ready(out)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    def tune(self, p: FusionPattern, sample_inputs: list | None = None) -> TunedKernel | None:
+        from repro.kernels.stitched import StitchInfeasible, build_stitched_callable
+
+        templates = generate_templates(p, self.cost)
+        best: TunedKernel | None = None
+        for template in templates:
+            plan = self.shared_planning(p, template)
+            if plan is None:
+                continue  # infeasible template (paper: skip)
+            rb = None
+            for s in template:
+                for a in s.attrs:
+                    for lvl in a.levels:
+                        if lvl.kind == "GRID" and lvl.factor:
+                            rb = lvl.factor
+            try:
+                fn = build_stitched_callable(
+                    p, row_block=rb, scratch_ops=template.scratch_ops
+                )
+            except StitchInfeasible:
+                continue
+            modeled = self.cost.fused_time(p)
+            # tiny grid-utilization nudge: prefer sublane-aligned row blocks
+            if rb and rb % 8:
+                modeled *= 1.05
+            measured = None
+            if self.execution_based and sample_inputs is not None:
+                try:
+                    measured = self._measure(fn, sample_inputs)
+                except Exception:
+                    continue
+            cand = TunedKernel(p, template, plan, modeled, measured, "pallas", fn)
+            key = measured if measured is not None else modeled
+            best_key = (
+                best.measured_time
+                if best and best.measured_time is not None
+                else (best.modeled_time if best else float("inf"))
+            )
+            if best is None or key < best_key:
+                best = cand
+        return best

@@ -1,0 +1,2 @@
+from .supervisor import (StepFailure, StragglerMonitor, TrainSupervisor,
+                         elastic_remesh, usable_mesh_shape)

@@ -1,0 +1,116 @@
+"""Fault tolerance: checkpoint/restart supervision, straggler mitigation,
+elastic re-meshing.
+
+On a real cluster the failure signals are process exits / heartbeat
+timeouts; in this container they are injected exceptions and simulated
+per-host step times, but the *control logic* below is the deployable part:
+
+* :class:`TrainSupervisor` — runs the step loop, checkpoints every
+  ``ckpt_every`` steps (async), and on any step failure restores the last
+  checkpoint and replays the data stream from the restored step (the data
+  pipeline is stateless-by-step so replay is exact).
+* :class:`StragglerMonitor` — per-host step-time EWMA; a host slower than
+  ``threshold`` x median is flagged; the launcher's response (documented,
+  simulated in tests) is to re-mesh without the slow host at the next
+  checkpoint boundary — the backup-worker pattern without 2x compute.
+* :func:`elastic_remesh` — given the devices still alive, build the largest
+  usable (data, model) mesh and return shardings to re-load the checkpoint
+  under; paired with mesh-agnostic checkpoints this is elastic scaling.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.ckpt import store
+
+
+class StepFailure(Exception):
+    """Raised (or injected) when a step dies (lost node, NaN, timeout)."""
+
+
+@dataclass
+class StragglerMonitor:
+    n_hosts: int
+    threshold: float = 1.8
+    alpha: float = 0.3
+    ewma: np.ndarray | None = None
+
+    def observe(self, host_times: np.ndarray) -> list[int]:
+        """Feed per-host step seconds; returns indices of flagged hosts."""
+        if self.ewma is None:
+            self.ewma = host_times.astype(np.float64).copy()
+        else:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * host_times
+        med = float(np.median(self.ewma))
+        return [i for i, t in enumerate(self.ewma) if t > self.threshold * med]
+
+
+def usable_mesh_shape(n_devices: int, model_parallel: int) -> tuple[int, int]:
+    """Largest (data, model) grid from surviving devices (elastic down-size):
+    keep TP fixed (weights are sharded that way), shrink DP."""
+    data = n_devices // model_parallel
+    if data < 1:
+        raise ValueError(
+            f"{n_devices} devices cannot host model_parallel={model_parallel}")
+    return (data, model_parallel)
+
+
+def elastic_remesh(devices, model_parallel: int):
+    """Build the largest valid mesh over surviving devices."""
+    import numpy as _np
+    from jax.sharding import Mesh
+    data, model = usable_mesh_shape(len(devices), model_parallel)
+    grid = _np.asarray(devices[: data * model]).reshape(data, model)
+    return Mesh(grid, ("data", "model"))
+
+
+@dataclass
+class TrainSupervisor:
+    train_step: Callable[[Any, Any], tuple[Any, dict]]
+    data_fn: Callable[[int], Any]          # step -> batch (stateless replay)
+    ckpt_dir: str
+    ckpt_every: int = 50
+    max_restarts: int = 3
+    on_restore: Callable[[Any], Any] | None = None
+
+    restarts: int = 0
+    metrics_log: list = field(default_factory=list)
+
+    def run(self, state, n_steps: int, fail_at: dict[int, Exception] | None = None):
+        """Run to `n_steps`, surviving injected failures. Returns final state."""
+        ckpt = store.AsyncCheckpointer(self.ckpt_dir)
+        fail_at = dict(fail_at or {})
+        step = int(jax.device_get(state.step))
+        store.save(state, self.ckpt_dir, step)  # step-0 baseline
+
+        while step < n_steps:
+            try:
+                if step in fail_at:
+                    exc = fail_at.pop(step)
+                    raise exc
+                batch = self.data_fn(step)
+                state, metrics = self.train_step(state, batch)
+                step = int(jax.device_get(state.step))
+                self.metrics_log.append(
+                    {k: float(jax.device_get(v)) for k, v in metrics.items()})
+                if step % self.ckpt_every == 0:
+                    ckpt.save_async(state, step)
+            except StepFailure:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                ckpt.wait()
+                like = jax.tree.map(
+                    lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), state)
+                state, step = store.restore(self.ckpt_dir, like)
+                if self.on_restore is not None:
+                    state = self.on_restore(state)
+        ckpt.wait()
+        return state

@@ -1,0 +1,173 @@
+"""Pure-jnp oracles for every hand-written Pallas kernel.
+
+These are the ground truth the kernel tests assert against, AND the
+lowering path used by the multi-pod dry-run (interpret-mode Pallas does not
+produce clean TPU HLO, so ``use_kernels=False`` model builds call these).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "rmsnorm", "rmsnorm_residual", "layernorm", "softmax", "swiglu", "geglu",
+    "squared_relu", "rope", "cross_entropy", "attention", "mamba_scan",
+    "rg_lru", "topk_router",
+]
+
+
+def rmsnorm(x, gamma, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_residual(x, res, gamma, eps: float = 1e-6):
+    """Fused residual-add + RMSNorm; returns (normed, new_residual)."""
+    s = x.astype(jnp.float32) + res.astype(jnp.float32)
+    return rmsnorm(s, gamma, eps).astype(x.dtype), s.astype(x.dtype)
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * gamma + beta).astype(x.dtype)
+
+
+def softmax(x, scale: float = 1.0, mask=None):
+    xf = x.astype(jnp.float32) * scale
+    if mask is not None:
+        xf = jnp.where(mask, xf, -jnp.inf)
+    m = jnp.max(xf, axis=-1, keepdims=True)
+    e = jnp.exp(xf - m)
+    out = e / jnp.sum(e, axis=-1, keepdims=True)
+    return out.astype(x.dtype)
+
+
+def swiglu(gate, up):
+    return (jax.nn.silu(gate.astype(jnp.float32)) * up.astype(jnp.float32)).astype(gate.dtype)
+
+
+def geglu(gate, up):
+    return (jax.nn.gelu(gate.astype(jnp.float32)) * up.astype(jnp.float32)).astype(gate.dtype)
+
+
+def squared_relu(x):
+    r = jnp.maximum(x.astype(jnp.float32), 0.0)
+    return (r * r).astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding. x: (..., L, H, Dh) or (..., L, Dh); positions (..., L)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq      # (..., L, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == positions.ndim + 2:                           # (..., L, H, Dh)
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy(logits, labels):
+    """Mean token NLL. logits (B, V) float, labels (B,) int."""
+    lf = logits.astype(jnp.float32)
+    m = jnp.max(lf, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    gold = jnp.take_along_axis(lf, labels[:, None].astype(jnp.int32), axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+              positions_q=None, positions_kv=None, window: int | None = None):
+    """GQA attention oracle.
+    q: (B, Lq, Hq, Dh), k/v: (B, Lkv, Hkv, Dh); Hq % Hkv == 0.
+    window: local-attention window size (RecurrentGemma-style)."""
+    B, Lq, Hq, Dh = q.shape
+    _, Lkv, Hkv, _ = k.shape
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(Dh)
+    kr = jnp.repeat(k, group, axis=2)
+    vr = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32)) * scale
+    pq = positions_q if positions_q is not None else jnp.arange(Lq)[None]
+    pk = positions_kv if positions_kv is not None else jnp.arange(Lkv)[None]
+    mask = jnp.ones((B, 1, Lq, Lkv), dtype=bool)
+    if causal:
+        mask = mask & (pq[:, None, :, None] >= pk[:, None, None, :])
+    if window is not None:
+        mask = mask & (pq[:, None, :, None] - pk[:, None, None, :] < window)
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def mamba_scan(x, delta, A, B, C, D, return_state: bool = False):
+    """Mamba-1 selective scan oracle.
+    x, delta: (Bb, L, Dm); A: (Dm, N); B, C: (Bb, L, N); D: (Dm,).
+    Returns y: (Bb, L, Dm) [, final state (Bb, Dm, N)]."""
+    xf, df = x.astype(jnp.float32), delta.astype(jnp.float32)
+    Af, Bf, Cf = A.astype(jnp.float32), B.astype(jnp.float32), C.astype(jnp.float32)
+
+    def step(h, inp):
+        # per-step discretization: the (Bb, Dm, N) tile lives only inside the
+        # step — never materialize (Bb, L, Dm, N) in HBM.
+        x_t, d_t, B_t, C_t = inp
+        dA_t = jnp.exp(d_t[..., None] * Af)              # (Bb, Dm, N)
+        dBx_t = (d_t * x_t)[..., None] * B_t[:, None, :]
+        h = dA_t * h + dBx_t
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((x.shape[0], x.shape[2], A.shape[1]), jnp.float32)
+    h_fin, ys = jax.lax.scan(
+        step, h0,
+        (xf.transpose(1, 0, 2), df.transpose(1, 0, 2),
+         Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2)),
+    )
+    y = ys.transpose(1, 0, 2) + xf * D.astype(jnp.float32)
+    if return_state:
+        return y.astype(x.dtype), h_fin
+    return y.astype(x.dtype)
+
+
+def rg_lru(x, input_gate, rec_gate, Lambda, c: float = 8.0,
+           return_state: bool = False):
+    """RG-LRU (RecurrentGemma) oracle.
+    x, input_gate, rec_gate: (B, L, D); Lambda: (D,) learnable.
+    a_t = exp(-c * softplus(Lambda) * sigmoid(rec_gate));
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (sigmoid(input_gate) * x_t)."""
+    xf = x.astype(jnp.float32)
+    log_a = -c * jax.nn.softplus(Lambda.astype(jnp.float32)) * jax.nn.sigmoid(
+        rec_gate.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jax.nn.sigmoid(input_gate.astype(jnp.float32)) * xf
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+
+    def step(h, inp):
+        a_t, gx_t = inp
+        h = a_t * h + gx_t
+        return h, h
+
+    inp = (a.transpose(1, 0, 2), (mult * gated).transpose(1, 0, 2))
+    h0 = jnp.zeros((x.shape[0], x.shape[2]), jnp.float32)
+    h_fin, hs = jax.lax.scan(step, h0, inp)
+    if return_state:
+        return hs.transpose(1, 0, 2).astype(x.dtype), h_fin
+    return hs.transpose(1, 0, 2).astype(x.dtype)
+
+
+def topk_router(logits, k: int, renormalize: bool = True):
+    """MoE router oracle: softmax over experts, top-k, optional renorm.
+    logits: (T, E). Returns (weights (T, k), indices (T, k))."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, idx = jax.lax.top_k(probs, k)
+    if renormalize:
+        weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    return weights.astype(logits.dtype), idx.astype(jnp.int32)

@@ -1,0 +1,2 @@
+# NOTE: intentionally does not import submodules — dryrun must set XLA_FLAGS
+# before jax initializes, so it is always imported/executed directly.

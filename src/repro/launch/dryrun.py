@@ -1,0 +1,385 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the device
+count on first init); 512 placeholder CPU devices back the production
+meshes.  For each cell we:
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., donate...).lower(*specs)
+        compiled = lowered.compile()
+        memory_analysis() / cost_analysis() / collective bytes from HLO
+
+and append a JSON record to the output file (incremental: a crashed sweep
+resumes where it left off).
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models import (SHAPES, batch_pspecs, build_model, cache_pspecs,
+                          param_pspecs)
+from repro.models.config import ShapeConfig
+from repro.optim import AdamWConfig, adamw
+from repro.train import make_train_step
+
+
+# ---------------------------------------------------------------------------
+# cell applicability (documented skips, DESIGN.md §Arch-applicability)
+# ---------------------------------------------------------------------------
+
+def cell_status(cfg, shape: ShapeConfig) -> str:
+    if shape.kind == "long_decode" and not cfg.subquadratic:
+        return "skip: full-attention arch, 512k dense decode is quadratic"
+    return "run"
+
+
+# ---------------------------------------------------------------------------
+# collective-bytes parser (post-SPMD optimized HLO)
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d+(?:_\d+)?|pred)\[([\d,]*)\]")
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8_e4m3": 1, "f8_e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_OP_RE = re.compile(r"=\s+([a-z0-9_]+)\[([\d,]*)\][^ ]*\s+([a-z\-]+)\(")
+
+# ops whose "bytes accessed" are CPU-lowering artifacts that a TPU pipeline
+# fuses away or never materializes: bf16<->f32 converts (CPU has no native
+# bf16), copies/bitcasts/GTEs (aliasing), parameter (counted at consumers),
+# broadcast (fused into consumers on TPU).
+_PHANTOM_OPS = {"convert", "copy", "bitcast", "get-tuple-element",
+                "parameter", "broadcast", "tuple", "constant", "iota",
+                "reshape"}
+
+
+def op_bytes_histogram(hlo_text: str) -> dict[str, float]:
+    """Output bytes per HLO op kind — the dry-run 'profile'."""
+    agg: dict[str, float] = {}
+    for m in _OP_RE.finditer(hlo_text):
+        dt, dims, op = m.groups()
+        n = 1
+        for dd in dims.split(","):
+            if dd:
+                n *= int(dd)
+        agg[op] = agg.get(op, 0.0) + n * _DTYPE_BYTES.get(dt, 4)
+    return agg
+
+
+def adjusted_bytes(hist: dict[str, float]) -> float:
+    """HLO bytes excluding CPU-backend phantom traffic (TPU-realistic)."""
+    return sum(v for k, v in hist.items() if k not in _PHANTOM_OPS)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-op-kind wire bytes (per device) from the optimized HLO.
+
+    Bytes-on-wire model (ring algorithms, k participants -> (k-1)/k ~ 1):
+        all-reduce:        2x result bytes (reduce-scatter + all-gather phases)
+        all-gather:        result bytes
+        reduce-scatter:    operand bytes  (~ result x k; we take result x 1
+                           conservatively from result side when operand shape
+                           is unavailable on the line -> use result bytes)
+        all-to-all:        result bytes
+        collective-permute: result bytes
+    """
+    out = {k: 0.0 for k in _COLL_OPS}
+    counts = {k: 0 for k in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for op in _COLL_OPS:
+            token = f" {op}("
+            if token not in stripped or stripped.startswith("//"):
+                continue
+            # result shapes: everything before the op token
+            head = stripped.split(token)[0]
+            nbytes = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(head))
+            mult = 2.0 if op == "all-reduce" else 1.0
+            out[op] += mult * nbytes
+            counts[op] += 1
+            break
+    out["total"] = sum(out[k] for k in _COLL_OPS)
+    out["counts"] = counts
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+
+def _shardings(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# probe configs: XLA cost analysis counts while-loop bodies ONCE, so the
+# full-depth scanned compile underreports flops/bytes/collectives.  We
+# compile depth-1 and depth-2 UNROLLED probes and extrapolate:
+#     per_unit = probe2 - probe1 ;  total = probe1 + (units - 1) * per_unit
+# which is exact for depth-homogeneous stacks (all 10 archs).  The scanned
+# full-depth compile is still what proves feasibility + memory fit.
+# ---------------------------------------------------------------------------
+
+import dataclasses
+
+
+def probe_cfg(cfg, depth: int):
+    kwargs: dict = {"scan_layers": False}
+    if cfg.family == "hybrid":
+        pat = len(cfg.hybrid.pattern)
+        rest = cfg.n_layers % pat
+        kwargs["n_layers"] = pat * depth + rest
+    else:
+        kwargs["n_layers"] = depth
+        if cfg.n_encoder_layers:
+            kwargs["n_encoder_layers"] = depth
+    return dataclasses.replace(cfg, **kwargs)
+
+
+def depth_units(cfg) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // len(cfg.hybrid.pattern)
+    return cfg.n_layers
+
+
+def build_cell(cfg, shape_name: str, mesh, opt_total_steps: int = 10000,
+               pin_decode_outs: bool = False):
+    """Returns (fn, arg_specs, arg_shardings, donate, out_shardings)."""
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    aparams = model.abstract_params()
+    pspecs = param_pspecs(aparams, cfg, mesh)
+    specs_in = model.input_specs(shape)
+
+    if shape.kind == "train":
+        from repro.train.step import TrainState
+        opt_shape = jax.eval_shape(adamw.init, aparams)
+        opt_specs = adamw.opt_state_pspecs(opt_shape, pspecs, mesh)
+        state_spec = TrainState(params=pspecs, opt=opt_specs, step=P())
+        state_shape = TrainState(params=aparams, opt=opt_shape,
+                                 step=jax.ShapeDtypeStruct((), jnp.int32))
+        batch_shape = specs_in["batch"]
+        bspecs = batch_pspecs(batch_shape, mesh)
+        step_fn = make_train_step(model, AdamWConfig(total_steps=opt_total_steps))
+        args = (state_shape, batch_shape)
+        shardings = (_shardings(state_spec, mesh), _shardings(bspecs, mesh))
+        return step_fn, args, shardings, (0,), None
+
+    if shape.kind == "prefill":
+        tok = specs_in["tokens"]
+        tspec = batch_pspecs(tok, mesh)
+        if cfg.family == "vlm":
+            pe = specs_in["patch_embeds"]
+            fn = lambda p, t, x: model.prefill(p, t, patch_embeds=x)
+            args = (aparams, tok, pe)
+            shardings = (_shardings(pspecs, mesh), _shardings(tspec, mesh),
+                         _shardings(batch_pspecs(pe, mesh), mesh))
+        elif cfg.family == "audio":
+            fr = specs_in["frames"]
+            fn = lambda p, t, x: model.prefill(p, t, frames=x)
+            args = (aparams, tok, fr)
+            shardings = (_shardings(pspecs, mesh), _shardings(tspec, mesh),
+                         _shardings(batch_pspecs(fr, mesh), mesh))
+        else:
+            fn = lambda p, t: model.prefill(p, t)
+            args = (aparams, tok)
+            shardings = (_shardings(pspecs, mesh), _shardings(tspec, mesh))
+        return fn, args, shardings, (), None
+
+    # decode / long_decode
+    cache = specs_in["cache"]
+    tok = specs_in["tokens"]
+    cspecs = cache_pspecs(cache, cfg, mesh)
+    tspec = batch_pspecs(tok, mesh)
+    out_shardings = None
+    if pin_decode_outs:
+        # (logits, new_cache): pin the new cache to the input cache layout
+        # so XLA cannot round-trip it through another sharding (§Perf)
+        logits_spec = jax.ShapeDtypeStruct((1,), jnp.float32)  # placeholder
+        out_shardings = (None, _shardings(cspecs, mesh))
+    if cfg.family == "audio":
+        enc = specs_in["enc_out"]
+        fn = lambda p, c, t, e: model.decode_step(p, c, t, enc_out=e)
+        args = (aparams, cache, tok, enc)
+        shardings = (_shardings(pspecs, mesh), _shardings(cspecs, mesh),
+                     _shardings(tspec, mesh),
+                     _shardings(batch_pspecs(enc, mesh), mesh))
+    else:
+        fn = lambda p, c, t: model.decode_step(p, c, t)
+        args = (aparams, cache, tok)
+        shardings = (_shardings(pspecs, mesh), _shardings(cspecs, mesh),
+                     _shardings(tspec, mesh))
+    return fn, args, shardings, (1,), out_shardings
+
+
+# ---------------------------------------------------------------------------
+# run one cell
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": cell_status(cfg, shape),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if rec["status"] != "run":
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    def _compile(use_cfg):
+        fn, args, shardings, donate, _outs = build_cell(use_cfg, shape_name, mesh)
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            return lowered.compile()
+
+    def _metrics(compiled) -> dict:
+        out = {}
+        cost = compiled.cost_analysis() or {}
+        out["flops"] = float(cost.get("flops", 0.0))
+        out["bytes"] = float(cost.get("bytes accessed", 0.0))
+        text = compiled.as_text()
+        coll = collective_bytes(text)
+        out["coll_total"] = coll["total"]
+        out["coll"] = {k: v for k, v in coll.items() if k != "counts"}
+        out["coll_counts"] = coll["counts"]
+        hist = op_bytes_histogram(text)
+        out["bytes_adjusted"] = adjusted_bytes(hist)
+        out["op_hist_top"] = dict(
+            sorted(hist.items(), key=lambda kv: -kv[1])[:12])
+        return out
+
+    # 1) full-depth scanned compile: feasibility + memory picture
+    compiled = _compile(cfg)
+    t_full = time.time() - t0
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        rec["memory"] = {
+            k: int(getattr(mem, k, 0)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes",
+             "alias_size_in_bytes")
+        }
+    rec["raw_scanned"] = _metrics(compiled)
+    rec["hlo_bytes"] = len(compiled.as_text())
+    del compiled
+
+    # 2) depth-1/depth-2 unrolled probes -> exact per-unit extrapolation
+    t1 = time.time()
+    p1 = _metrics(_compile(probe_cfg(cfg, 1)))
+    p2 = _metrics(_compile(probe_cfg(cfg, 2)))
+    units = depth_units(cfg)
+
+    def extrap(a, b):
+        return a + (units - 1) * max(b - a, 0.0)
+
+    rec["flops_per_device"] = extrap(p1["flops"], p2["flops"])
+    rec["bytes_per_device"] = extrap(p1["bytes"], p2["bytes"])
+    rec["bytes_adjusted_per_device"] = extrap(p1["bytes_adjusted"], p2["bytes_adjusted"])
+    rec["collective_bytes_per_device"] = extrap(p1["coll_total"], p2["coll_total"])
+    rec["collectives"] = {
+        k: extrap(p1["coll"][k], p2["coll"][k])
+        for k in p1["coll"] if k != "total"
+    }
+    rec["coll_counts_probe2"] = p2["coll_counts"]
+    rec["probe"] = {"p1": p1, "p2": p2, "units": units}
+    rec["t_compile_full_s"] = round(t_full, 2)
+    rec["t_probes_s"] = round(time.time() - t1, 2)
+
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: "
+              f"flops/dev={rec['flops_per_device']:.3e} "
+              f"bytes/dev={rec['bytes_per_device']:.3e} "
+              f"coll/dev={rec['collective_bytes_per_device']:.3e}B "
+              f"(full {t_full:.1f}s probes {rec['t_probes_s']:.1f}s)", flush=True)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.all:
+        cells = [(a, s) for a in ARCHS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    done = set()
+    out_path = Path(args.out) if args.out else None
+    if out_path and out_path.exists():
+        for line in out_path.read_text().splitlines():
+            try:
+                r = json.loads(line)
+                done.add((r["arch"], r["shape"], r["mesh"]))
+            except json.JSONDecodeError:
+                pass
+
+    failures = 0
+    for arch, shape_name in cells:
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            key = (arch.replace("-", "_"), shape_name, mesh_name)
+            if key in done:
+                continue
+            try:
+                rec = run_cell(arch, shape_name, multi_pod=mp)
+            except Exception as e:  # a failing cell is a bug — record it loudly
+                rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                       "status": f"FAIL: {type(e).__name__}: {e}"}
+                failures += 1
+                print(f"[dryrun] FAIL {arch} x {shape_name} x {mesh_name}: {e}",
+                      file=sys.stderr, flush=True)
+            if out_path:
+                with open(out_path, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

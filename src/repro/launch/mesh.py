@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (device count is locked at first jax init, and only the
+dry-run wants 512 placeholder devices).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips per pod; the multi-pod mesh adds an outer 2-pod DP
+    axis (gradient reduction crosses DCN on 'pod', ICI on 'data')."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1) -> Mesh:
+    """Largest mesh over whatever devices exist (1 on this CPU container) —
+    used by the real train/serve drivers and the elastic-restart path."""
+    n = len(jax.devices())
+    data = max(n // model_parallel, 1)
+    return jax.make_mesh((data, model_parallel), ("data", "model"))

@@ -1,0 +1,186 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimb driver (EXPERIMENTS.md §Perf).
+
+Lowers one (arch x shape x mesh) cell with optimization-variant overrides
+and prints the roofline metric deltas vs the recorded baseline, plus a
+top-collectives dump (the dry-run 'profile').
+
+    python -m repro.launch.perf --arch qwen2-moe-a2.7b --shape train_4k \
+        --set moe_groups=16 shard_activations=1 \
+        --baseline dryrun_results.jsonl
+
+Variants (--set key=value, repeatable):
+    moe_groups=N          grouped MoE dispatch (0=auto, 1=global baseline)
+    shard_activations=1   pin activation token-dim to DP at layer boundaries
+    zero1_skip=1          ZeRO-1 skips the layer-stack dim of stacked leaves
+    remat=dots|none|full  activation-checkpoint policy
+    param_dtype=bfloat16  parameter storage dtype
+    capacity=F            MoE capacity factor
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.launch import dryrun as dr
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
+from repro.models import SHAPES
+
+
+def apply_variants(cfg, variants: dict):
+    over = {}
+    moe_over = {}
+    if "moe_groups" in variants and cfg.moe:
+        moe_over["n_groups"] = int(variants["moe_groups"])
+    if "capacity" in variants and cfg.moe:
+        moe_over["capacity_factor"] = float(variants["capacity"])
+    if moe_over:
+        over["moe"] = dataclasses.replace(cfg.moe, **moe_over)
+    if variants.get("shard_activations"):
+        over["shard_activations"] = bool(int(variants["shard_activations"]))
+    if "remat" in variants:
+        over["remat"] = variants["remat"]
+    if "param_dtype" in variants:
+        over["param_dtype"] = variants["param_dtype"]
+    if "loss_groups" in variants:
+        over["loss_groups"] = int(variants["loss_groups"])
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+def top_collectives(hlo: str, n: int = 8):
+    """Largest individual collective ops in the optimized HLO."""
+    rows = []
+    for line in hlo.splitlines():
+        s = line.strip()
+        for op in dr._COLL_OPS:
+            if f" {op}(" in s:
+                head = s.split(f" {op}(")[0]
+                b = sum(dr._shape_bytes(d, dims)
+                        for d, dims in dr._SHAPE_RE.findall(head))
+                rows.append((b, op, head[:90]))
+                break
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def run(arch, shape_name, multi_pod, variants, zero1_skip=False, dump=False):
+    cfg = apply_variants(get_config(arch), variants)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    if zero1_skip:
+        from repro.optim import adamw
+        orig = adamw.opt_state_pspecs
+        adamw.opt_state_pspecs = (
+            lambda s, p, m, skip_leading=True: orig(s, p, m, skip_leading=True))
+
+    pin = bool(int(variants.get("pin_decode_outs", 0)))
+    if variants.get("kv_shard"):
+        from repro.models import sharding as _sh
+        _sh.CACHE_KV_DIM = variants["kv_shard"]
+
+    def _compile(use_cfg):
+        fn, args, shardings, donate, outs = dr.build_cell(
+            use_cfg, shape_name, mesh, pin_decode_outs=pin)
+        with mesh:
+            kw = {}
+            if outs is not None:
+                kw["out_shardings"] = outs
+            return jax.jit(fn, in_shardings=shardings, donate_argnums=donate,
+                           **kw).lower(*args).compile()
+
+    t0 = time.time()
+    p1c = _compile(dr.probe_cfg(cfg, 1))
+    p2c = _compile(dr.probe_cfg(cfg, 2))
+
+    def _metrics(compiled):
+        cost = compiled.cost_analysis() or {}
+        text = compiled.as_text()
+        hist = dr.op_bytes_histogram(text)
+        return {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_adjusted": dr.adjusted_bytes(hist),
+            "coll": dr.collective_bytes(text),
+            "text": text,
+        }
+
+    p1, p2 = _metrics(p1c), _metrics(p2c)
+    units = dr.depth_units(cfg)
+
+    def extrap(a, b):
+        return a + (units - 1) * max(b - a, 0.0)
+
+    out = {
+        "flops": extrap(p1["flops"], p2["flops"]),
+        "bytes": extrap(p1["bytes_adjusted"], p2["bytes_adjusted"]),
+        "coll": extrap(p1["coll"]["total"], p2["coll"]["total"]),
+        "coll_kinds": {k: extrap(p1["coll"][k], p2["coll"][k])
+                       for k in dr._COLL_OPS},
+        "t": time.time() - t0,
+    }
+    if dump:
+        out["top"] = top_collectives(p2["text"])
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", nargs="*", default=[], dest="sets")
+    ap.add_argument("--zero1-skip", action="store_true")
+    ap.add_argument("--baseline", default=None)
+    ap.add_argument("--dump-collectives", action="store_true")
+    args = ap.parse_args()
+
+    variants = dict(kv.split("=", 1) for kv in args.sets)
+    res = run(args.arch, args.shape, args.multi_pod, variants,
+              zero1_skip=args.zero1_skip, dump=args.dump_collectives)
+
+    terms = {
+        "compute_s": res["flops"] / PEAK_FLOPS,
+        "memory_s": res["bytes"] / HBM_BW,
+        "collective_s": res["coll"] / LINK_BW,
+    }
+    print(f"\n== {args.arch} x {args.shape} x "
+          f"{'2x16x16' if args.multi_pod else '16x16'} "
+          f"variants={variants or 'NONE'} zero1_skip={args.zero1_skip}")
+    print(f" flops/dev={res['flops']:.3e}  bytes/dev={res['bytes']:.3e}  "
+          f"coll/dev={res['coll']:.3e}")
+    print(f" terms: compute={terms['compute_s']:.3f}s "
+          f"memory={terms['memory_s']:.3f}s collective={terms['collective_s']:.3f}s "
+          f"(compile {res['t']:.0f}s)")
+    print(" coll kinds:", {k: f"{v:.2e}" for k, v in res["coll_kinds"].items()})
+
+    if args.baseline:
+        mesh_name = "2x16x16" if args.multi_pod else "16x16"
+        arch_key = args.arch.lower().replace("-", "_").replace(".", "_")
+        for line in open(args.baseline):
+            r = json.loads(line)
+            if (r["arch"], r["shape"], r.get("mesh")) == (arch_key, args.shape, mesh_name):
+                b_c = r["flops_per_device"] / PEAK_FLOPS
+                b_m = r["bytes_adjusted_per_device"] / HBM_BW
+                b_l = r["collective_bytes_per_device"] / LINK_BW
+                print(f" baseline: compute={b_c:.3f}s memory={b_m:.3f}s "
+                      f"collective={b_l:.3f}s")
+                print(f" delta:    compute x{terms['compute_s']/max(b_c,1e-12):.2f} "
+                      f"memory x{terms['memory_s']/max(b_m,1e-12):.2f} "
+                      f"collective x{terms['collective_s']/max(b_l,1e-12):.2f}")
+                break
+    if args.dump_collectives:
+        print(" top collectives (probe2):")
+        for b, op, head in res["top"]:
+            print(f"   {b:14,d}B  {op:18s} {head}")
+
+
+if __name__ == "__main__":
+    main()

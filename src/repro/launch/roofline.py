@@ -1,0 +1,168 @@
+"""Roofline analysis over dry-run records (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell:
+
+    compute term    = FLOPs_dev / peak_FLOPs_chip
+    memory term     = bytes_dev / HBM_bw          (raw HLO bytes; an
+                      'adjusted' column excludes CPU-lowering phantom ops)
+    collective term = coll_bytes_dev / link_bw
+
+(the dry-run HLO is the per-device SPMD program, so per-device quantities
+divided by per-chip peaks equal the brief's global/(chips x peak) formula),
+plus MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) and the useful-compute
+ratio MODEL_FLOPS / HLO_FLOPs_global.
+
+For SSM/hybrid cells the sequence recurrence runs as a lax.scan whose
+per-trip state round-trip the probe extrapolation cannot see (trip count =
+seq len, not depth); :func:`scan_state_traffic` adds that analytic term —
+and its Pallas-kernel counterpart (state in VREG, no HBM round-trip) is the
+quantified win reported in §Perf.
+
+Usage:
+    python -m repro.launch.roofline --in dryrun_results.jsonl --md out.md
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+from pathlib import Path
+
+# TPU v5e deployment target
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+
+def chips(mesh: str) -> int:
+    n = 1
+    for d in mesh.split("x"):
+        n *= int(d)
+    return n
+
+
+def model_flops(rec: dict, cfg=None) -> float:
+    """6·N·D training / 2·N·D inference FLOPs over the *global* token count."""
+    from repro.configs import get_config
+    from repro.models import SHAPES
+    cfg = cfg or get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2.0 * (2 if cfg.family == "audio" else 1)  # enc+dec both run
+        return mult * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def scan_state_traffic(rec: dict) -> float:
+    """Analytic HBM bytes/device of the recurrence state round-trip that the
+    XLA lax.scan path incurs (read+write carry per timestep) — invisible to
+    the depth probes.  Returns 0 for non-recurrent archs or decode cells."""
+    from repro.configs import get_config
+    from repro.models import SHAPES
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    if shape.is_decode or cfg.family not in ("ssm", "hybrid"):
+        return 0.0
+    n_dev = chips(rec["mesh"])
+    B, L = shape.global_batch, shape.seq_len
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        dm = s.expand * cfg.d_model
+        per_trip = 2 * B * dm * s.d_state * 4            # carry RW, f32
+        return cfg.n_layers * L * per_trip / n_dev
+    h = cfg.hybrid
+    drnn = h.d_rnn or cfg.d_model
+    n_rec = sum(1 for i in range(cfg.n_layers)
+                if h.pattern[i % len(h.pattern)] == "rec")
+    per_trip = 2 * B * drnn * 4
+    return n_rec * L * per_trip / n_dev
+
+
+def analyze(rec: dict) -> dict | None:
+    if rec.get("status") != "run" or "flops_per_device" not in rec:
+        return None
+    n = chips(rec["mesh"])
+    extra_scan = scan_state_traffic(rec)
+    compute = rec["flops_per_device"] / PEAK_FLOPS
+    memory = (rec["bytes_per_device"] + extra_scan) / HBM_BW
+    memory_adj = (rec.get("bytes_adjusted_per_device",
+                          rec["bytes_per_device"]) + extra_scan) / HBM_BW
+    coll = rec["collective_bytes_per_device"] / LINK_BW
+    terms = {"compute": compute, "memory": memory_adj, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    hlo_global = rec["flops_per_device"] * n
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute, "memory_raw_s": memory, "memory_s": memory_adj,
+        "collective_s": coll, "scan_state_bytes": extra_scan,
+        "dominant": dominant,
+        "model_flops": mf, "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else float("nan"),
+        "step_time_s": max(terms.values()),
+        "roofline_frac": (min(compute, max(terms.values())) and
+                          compute / max(terms.values())),
+    }
+
+
+def load(path: str) -> list[dict]:
+    recs = []
+    for line in Path(path).read_text().splitlines():
+        line = line.strip()
+        if line:
+            recs.append(json.loads(line))
+    return recs
+
+
+def to_markdown(rows: list[dict], skips: list[dict]) -> str:
+    out = ["| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+           "| dominant | 6ND/HLO | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_frac']:.2f} |")
+    if skips:
+        out.append("")
+        out.append("Skipped cells (documented in DESIGN.md §Arch-applicability):")
+        for s in skips:
+            out.append(f"- {s['arch']} x {s['shape']} x {s['mesh']}: {s['status']}")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="dryrun_results.jsonl")
+    ap.add_argument("--md", default=None)
+    ap.add_argument("--json", dest="json_out", default=None)
+    args = ap.parse_args()
+
+    recs = load(args.inp)
+    rows, skips = [], []
+    for rec in recs:
+        if rec.get("status") != "run":
+            skips.append(rec)
+            continue
+        a = analyze(rec)
+        if a:
+            rows.append(a)
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    md = to_markdown(rows, skips)
+    print(md)
+    if args.md:
+        Path(args.md).write_text(md + "\n")
+    if args.json_out:
+        Path(args.json_out).write_text(json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Training driver — real execution on whatever devices exist.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --reduced --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+On this container that is CPU execution of the reduced config (the e2e
+example trains a ~100M-param model); on a TPU slice the same driver runs
+the full config over :func:`make_production_mesh` — everything between the
+CLI and the hardware is mesh-shape agnostic.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_reduced
+from repro.data import DataConfig, SyntheticTokens
+from repro.ft import StepFailure, TrainSupervisor
+from repro.launch.mesh import make_host_mesh
+from repro.models import batch_pspecs, build_model, param_pspecs
+from repro.optim import AdamWConfig, adamw
+from repro.train import TrainState, init_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--d-model", type=int, default=None,
+                    help="override width (e.g. to hit ~100M params)")
+    ap.add_argument("--n-layers", type=int, default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    over = {}
+    if args.d_model:
+        over["d_model"] = args.d_model
+    if args.n_layers:
+        over["n_layers"] = args.n_layers
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+    model = build_model(cfg)
+    mesh = make_host_mesh(args.model_parallel)
+    print(f"arch={cfg.name} params~{cfg.param_count():,} mesh={dict(mesh.shape)}")
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                          total_steps=args.steps)
+    state = init_state(model, jax.random.PRNGKey(0))
+
+    aparams = jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype),
+                           state.params)
+    pspecs = param_pspecs(aparams, cfg, mesh)
+    opt_specs = adamw.opt_state_pspecs(state.opt, pspecs, mesh)
+    state_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        TrainState(params=pspecs, opt=opt_specs, step=P()),
+        is_leaf=lambda x: isinstance(x, P))
+    state = jax.device_put(state, state_sh)
+
+    data = SyntheticTokens(DataConfig(cfg.vocab, args.seq, args.batch))
+    step_raw = make_train_step(model, opt_cfg, microbatches=args.microbatches)
+    bspecs = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                          batch_pspecs(data.batch(0), mesh),
+                          is_leaf=lambda x: isinstance(x, P))
+    step_fn = jax.jit(step_raw, in_shardings=(state_sh, bspecs),
+                      donate_argnums=(0,))
+
+    def data_fn(step: int):
+        return jax.device_put(data.batch(step), bspecs)
+
+    sup = TrainSupervisor(step_fn, data_fn, args.ckpt_dir,
+                          ckpt_every=args.ckpt_every)
+    t0 = time.time()
+    last = [t0]
+
+    orig_step = sup.train_step
+
+    def logged(state, batch):
+        out_state, metrics = orig_step(state, batch)
+        s = int(jax.device_get(out_state.step))
+        if s % args.log_every == 0 or s == 1:
+            now = time.time()
+            print(f"step {s:5d}  loss {float(metrics['loss']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"{(now - last[0]) / args.log_every:.3f}s/step", flush=True)
+            last[0] = now
+        return out_state, metrics
+
+    sup.train_step = logged
+    state = sup.run(state, args.steps)
+    print(f"done: {args.steps} steps in {time.time() - t0:.1f}s; "
+          f"final loss {sup.metrics_log[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

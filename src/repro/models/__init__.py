@@ -1,0 +1,12 @@
+"""Model zoo for the 10 assigned architectures."""
+
+from .api import Model, build_model
+from .config import HybridConfig, ModelConfig, MoEConfig, SHAPES, ShapeConfig, SSMConfig
+from .sharding import batch_pspecs, cache_pspecs, mesh_axes, param_pspecs, param_shardings
+
+__all__ = [
+    "Model", "build_model",
+    "ModelConfig", "MoEConfig", "SSMConfig", "HybridConfig",
+    "ShapeConfig", "SHAPES",
+    "param_pspecs", "param_shardings", "batch_pspecs", "cache_pspecs", "mesh_axes",
+]

@@ -1,0 +1,125 @@
+"""Unified model interface: build any assigned architecture from its config,
+get train/prefill/decode callables and dry-run input specs.
+
+``Model`` methods are pure functions of (params, inputs) — ready for
+``jax.jit`` with shardings from :mod:`repro.models.sharding`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, griffin, lm, mamba
+from .config import ModelConfig, ShapeConfig
+
+Params = dict[str, Any]
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Params]
+    train_forward: Callable[..., tuple]           # (params, batch) -> (loss, aux)
+    prefill: Callable[..., tuple]                 # (params, **inputs) -> (logits, cache)
+    decode_step: Callable[..., tuple] | None      # (params, cache, tokens, **extra)
+    init_cache: Callable[[int, int], Params] | None
+
+    # -- dry-run input specs --------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        tok = jax.ShapeDtypeStruct((B, S), i32)
+
+        if shape.kind == "train":
+            batch: dict[str, Any] = {"tokens": tok, "labels": tok}
+            if cfg.family == "vlm":
+                batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_patch_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+            if cfg.family == "audio":
+                batch["frames"] = jax.ShapeDtypeStruct(
+                    (B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+            return {"batch": batch}
+
+        if shape.kind == "prefill":
+            out: dict[str, Any] = {"tokens": tok}
+            if cfg.family == "vlm":
+                out["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_patch_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+            if cfg.family == "audio":
+                out["frames"] = jax.ShapeDtypeStruct(
+                    (B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+            return out
+
+        # decode / long_decode: one new token against a seq_len cache
+        cache = jax.eval_shape(lambda: self.init_cache(B, S))
+        out = {
+            "cache": cache,
+            "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+        }
+        if cfg.family == "audio":
+            out["enc_out"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+        return out
+
+    def abstract_params(self) -> Params:
+        return jax.eval_shape(self.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "ssm":
+        return Model(
+            cfg=cfg,
+            init=lambda key: mamba.init_params(cfg, key),
+            train_forward=lambda p, batch: mamba.train_forward(p, batch, cfg),
+            prefill=lambda p, tokens, **kw: mamba.prefill(p, tokens, cfg),
+            decode_step=lambda p, cache, tokens, **kw: mamba.decode_step(
+                p, cache, tokens, cfg),
+            init_cache=lambda b, s: mamba.init_cache(cfg, b, s),
+        )
+    if cfg.family == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=lambda key: griffin.init_params(cfg, key),
+            train_forward=lambda p, batch: griffin.train_forward(p, batch, cfg),
+            prefill=lambda p, tokens, **kw: griffin.prefill(p, tokens, cfg),
+            decode_step=lambda p, cache, tokens, **kw: griffin.decode_step(
+                p, cache, tokens, cfg),
+            init_cache=lambda b, s: griffin.init_cache(cfg, b, s),
+        )
+    if cfg.family == "audio":
+        def _train(p, batch):
+            return encdec.train_forward(p, batch, cfg)
+
+        def _prefill(p, tokens, frames=None, **kw):
+            enc_out = encdec.encode(p, frames, cfg)
+            # teacher-forced decoder prefill: build self-attn cache
+            h = encdec.decode(p, tokens, enc_out, cfg)
+            logits = (h[:, -1] @ p["lm_head"].astype(cfg.dtype)).astype(jnp.float32)
+            return logits, enc_out
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(cfg, key),
+            train_forward=_train,
+            prefill=_prefill,
+            decode_step=lambda p, cache, tokens, enc_out=None, **kw:
+                encdec.decode_step(p, cache, tokens, enc_out, cfg),
+            init_cache=lambda b, s: encdec.init_cache(cfg, b, s),
+        )
+    # dense / moe / vlm share the decoder-only LM implementation
+    return Model(
+        cfg=cfg,
+        init=lambda key: lm.init_params(cfg, key),
+        train_forward=lambda p, batch: lm.train_forward(p, batch, cfg),
+        prefill=lambda p, tokens, patch_embeds=None, **kw: lm.prefill(
+            p, tokens, cfg, patch_embeds=patch_embeds),
+        decode_step=lambda p, cache, tokens, **kw: lm.decode_step(
+            p, cache, tokens, cfg),
+        init_cache=lambda b, s: lm.init_cache(cfg, b, s),
+    )

@@ -1,0 +1,171 @@
+"""Encoder-decoder transformer (seamless-m4t-medium family).
+
+The audio frontend is a STUB per the brief: ``input_specs`` feeds
+precomputed frame embeddings (B, S_frames, D) straight into the encoder.
+Decoder layers add cross-attention over the encoder output.  Pre-LN
+LayerNorm, GeGLU-free plain MLP is configurable via cfg.act.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from .config import ModelConfig
+from .layers import (
+    Params, apply_attention, apply_mlp, apply_norm,
+    init_attention, init_mlp, init_norm, scan_or_unroll,
+)
+
+
+def init_enc_layer(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "norm1": init_norm(k1, cfg),
+        "attn": init_attention(k2, cfg),
+        "norm2": init_norm(k3, cfg),
+        "mlp": init_mlp(k4, cfg),
+    }
+
+
+def init_dec_layer(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        "norm1": init_norm(k1, cfg),
+        "self_attn": init_attention(k2, cfg),
+        "norm_x": init_norm(k3, cfg),
+        "cross_attn": init_attention(k4, cfg),
+        "norm2": init_norm(k5, cfg),
+        "mlp": init_mlp(k6, cfg),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ke, k1, k2, kh = jax.random.split(key, 4)
+    enc = jax.vmap(lambda k: init_enc_layer(k, cfg))(
+        jax.random.split(k1, cfg.n_encoder_layers))
+    dec = jax.vmap(lambda k: init_dec_layer(k, cfg))(
+        jax.random.split(k2, cfg.n_layers))
+    return {
+        "embed": (jax.random.normal(ke, (cfg.vocab, cfg.d_model)) * 0.02).astype(cfg.param_dtype),
+        "enc_layers": enc,
+        "enc_norm": init_norm(kh, cfg),
+        "dec_layers": dec,
+        "final_norm": init_norm(kh, cfg),
+        "lm_head": (jax.random.normal(kh, (cfg.d_model, cfg.vocab))
+                    / math.sqrt(cfg.d_model)).astype(cfg.param_dtype),
+    }
+
+
+def _bidir_attention(p, x, cfg: ModelConfig):
+    """Full bidirectional self-attention (encoder)."""
+    dt = cfg.dtype
+    B, S, D = x.shape
+    Hq, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, Hq, dh)
+    k = (x @ p["wk"].astype(dt)).reshape(B, S, Hkv, dh)
+    v = (x @ p["wv"].astype(dt)).reshape(B, S, Hkv, dh)
+    out = ref.attention(q, k, v, causal=False)
+    return out.reshape(B, S, Hq * dh) @ p["wo"].astype(dt)
+
+
+def _cross_attention(p, x, enc_out, cfg: ModelConfig):
+    dt = cfg.dtype
+    B, S, D = x.shape
+    Se = enc_out.shape[1]
+    Hq, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, Hq, dh)
+    k = (enc_out @ p["wk"].astype(dt)).reshape(B, Se, Hkv, dh)
+    v = (enc_out @ p["wv"].astype(dt)).reshape(B, Se, Hkv, dh)
+    out = ref.attention(q, k, v, causal=False)
+    return out.reshape(B, S, Hq * dh) @ p["wo"].astype(dt)
+
+
+def encode(params: Params, frames, cfg: ModelConfig):
+    """frames: (B, S_frames, D) precomputed frontend embeddings."""
+    h = frames.astype(cfg.dtype)
+
+    def body(carry, lp):
+        x = carry
+        x = x + _bidir_attention(lp["attn"], apply_norm(lp["norm1"], x, cfg), cfg)
+        x = x + apply_mlp(lp["mlp"], apply_norm(lp["norm2"], x, cfg), cfg)
+        return x, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    h, _ = scan_or_unroll(body, h, params["enc_layers"],
+                          cfg.n_encoder_layers, cfg.scan_layers)
+    return apply_norm(params["enc_norm"], h, cfg)
+
+
+def decode(params: Params, tokens, enc_out, cfg: ModelConfig):
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+
+    def body(carry, lp):
+        x = carry
+        a, _ = apply_attention(lp["self_attn"], apply_norm(lp["norm1"], x, cfg),
+                               cfg, positions)
+        x = x + a
+        x = x + _cross_attention(lp["cross_attn"], apply_norm(lp["norm_x"], x, cfg),
+                                 enc_out, cfg)
+        x = x + apply_mlp(lp["mlp"], apply_norm(lp["norm2"], x, cfg), cfg)
+        return x, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    h, _ = scan_or_unroll(body, h, params["dec_layers"], cfg.n_layers,
+                          cfg.scan_layers)
+    return apply_norm(params["final_norm"], h, cfg)
+
+
+def train_forward(params: Params, batch: dict, cfg: ModelConfig):
+    from .lm import lm_loss
+    enc_out = encode(params, batch["frames"], cfg)
+    h = decode(params, batch["tokens"], enc_out, cfg)
+    return lm_loss(params, h, batch["labels"], cfg), {}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.dh)
+    return {
+        "k": jnp.zeros(shape, cfg.dtype),
+        "v": jnp.zeros(shape, cfg.dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params: Params, cache: Params, tokens, enc_out, cfg: ModelConfig):
+    """Single-token decoder step with self-attn KV cache; cross-attn reads
+    the static encoder output."""
+    B, S = tokens.shape
+    length = cache["length"]
+    positions = length + jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+
+    def body(carry, xs):
+        x = carry
+        lp, ck, cv = xs
+        layer_cache = {"k": ck, "v": cv, "length": length}
+        a, nc = apply_attention(lp["self_attn"], apply_norm(lp["norm1"], x, cfg),
+                                cfg, positions, cache=layer_cache)
+        x = x + a
+        x = x + _cross_attention(lp["cross_attn"], apply_norm(lp["norm_x"], x, cfg),
+                                 enc_out, cfg)
+        x = x + apply_mlp(lp["mlp"], apply_norm(lp["norm2"], x, cfg), cfg)
+        return x, (nc["k"], nc["v"])
+
+    h, (nk, nv) = scan_or_unroll(
+        body, h, (params["dec_layers"], cache["k"], cache["v"]),
+        cfg.n_layers, cfg.scan_layers)
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = (h[:, -1] @ params["lm_head"].astype(cfg.dtype)).astype(jnp.float32)
+    return logits, {"k": nk, "v": nv, "length": length + S}

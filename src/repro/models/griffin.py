@@ -1,0 +1,334 @@
+"""RecurrentGemma-style hybrid LM (griffin): repeating (RG-LRU, RG-LRU,
+local-attention) blocks, GeGLU MLPs.
+
+Layers scan in *super-blocks* of the 3-layer pattern; a config whose depth
+is not a multiple of the pattern gets the remainder as unscanned recurrent
+blocks (recurrentgemma-9b: 38 = 12x3 + 2).  Decode state is O(1) in context:
+RG-LRU carries (B, D_rnn) per recurrent layer; local attention keeps only a
+``window``-sized rolling KV cache.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .config import HybridConfig, ModelConfig
+from .layers import (
+    Params, apply_attention, apply_mlp, apply_norm,
+    init_attention, init_mlp, init_norm, scan_or_unroll,
+)
+
+
+def _h(cfg: ModelConfig) -> HybridConfig:
+    return cfg.hybrid or HybridConfig()
+
+
+def init_rec_layer(key, cfg: ModelConfig) -> Params:
+    h = _h(cfg)
+    D, Dr = cfg.d_model, h.d_rnn or cfg.d_model
+    ks = jax.random.split(key, 6)
+    sc = 1.0 / math.sqrt(D)
+    pd = cfg.param_dtype
+    return {
+        "norm1": init_norm(ks[0], cfg),
+        "x_proj": (jax.random.normal(ks[1], (D, Dr)) * sc).astype(pd),
+        "in_gate": (jax.random.normal(ks[2], (D, Dr)) * sc).astype(pd),
+        "rec_gate": (jax.random.normal(ks[3], (D, Dr)) * sc).astype(pd),
+        "Lambda": jnp.full((Dr,), 0.5, pd),
+        "out_proj": (jax.random.normal(ks[4], (Dr, D)) / math.sqrt(Dr)).astype(pd),
+        "norm2": init_norm(ks[5], cfg),
+        "mlp": init_mlp(ks[5], cfg),
+    }
+
+
+def init_attn_layer(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "norm1": init_norm(k1, cfg),
+        "attn": init_attention(k2, cfg),
+        "norm2": init_norm(k3, cfg),
+        "mlp": init_mlp(k4, cfg),
+    }
+
+
+def _layout(cfg: ModelConfig):
+    pat = _h(cfg).pattern
+    n_super = cfg.n_layers // len(pat)
+    n_rest = cfg.n_layers - n_super * len(pat)
+    return pat, n_super, n_rest
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    pat, n_super, n_rest = _layout(cfg)
+    ke, ks_, kr, kh = jax.random.split(key, 4)
+    super_keys = jax.random.split(ks_, n_super)
+
+    def init_super(k):
+        kk = jax.random.split(k, len(pat))
+        return {
+            f"l{i}": (init_rec_layer(kk[i], cfg) if pat[i] == "rec"
+                      else init_attn_layer(kk[i], cfg))
+            for i in range(len(pat))
+        }
+
+    p = {
+        "embed": (jax.random.normal(ke, (cfg.vocab, cfg.d_model)) * 0.02).astype(cfg.param_dtype),
+        "supers": jax.vmap(init_super)(super_keys),
+        "rest": [init_rec_layer(k, cfg) for k in jax.random.split(kr, n_rest)],
+        "final_norm": init_norm(kh, cfg),
+        "lm_head": (jax.random.normal(kh, (cfg.d_model, cfg.vocab))
+                    / math.sqrt(cfg.d_model)).astype(cfg.param_dtype),
+    }
+    return p
+
+
+def _rec_block(lp: Params, x, cfg: ModelConfig):
+    dt = cfg.dtype
+    xn = apply_norm(lp["norm1"], x, cfg)
+    y = ops.rg_lru(
+        xn @ lp["x_proj"].astype(dt),
+        xn @ lp["in_gate"].astype(dt),
+        xn @ lp["rec_gate"].astype(dt),
+        lp["Lambda"].astype(jnp.float32),
+        _h(cfg).c,
+    )
+    x = x + y @ lp["out_proj"].astype(dt)
+    return x + apply_mlp(lp["mlp"], apply_norm(lp["norm2"], x, cfg), cfg)
+
+
+def _attn_block(lp: Params, x, cfg: ModelConfig, positions):
+    a, _ = apply_attention(lp["attn"], apply_norm(lp["norm1"], x, cfg), cfg,
+                           positions, window=_h(cfg).window)
+    x = x + a
+    return x + apply_mlp(lp["mlp"], apply_norm(lp["norm2"], x, cfg), cfg)
+
+
+def backbone(params: Params, h, cfg: ModelConfig, positions):
+    pat, n_super, n_rest = _layout(cfg)
+
+    def super_fn(carry, sp):
+        x = carry
+        if cfg.shard_activations:
+            from .sharding import hint_rows
+            x = hint_rows(x)
+        for i, kind in enumerate(pat):
+            lp = sp[f"l{i}"]
+            x = _rec_block(lp, x, cfg) if kind == "rec" else _attn_block(lp, x, cfg, positions)
+        return x, None
+
+    if cfg.remat == "full":
+        super_fn = jax.checkpoint(super_fn)
+    _, n_super, _ = _layout(cfg)
+    h, _ = scan_or_unroll(super_fn, h, params["supers"], n_super,
+                          cfg.scan_layers)
+    for lp in params["rest"]:
+        h = _rec_block(lp, h, cfg)
+    return apply_norm(params["final_norm"], h, cfg)
+
+
+def train_forward(params: Params, batch: dict, cfg: ModelConfig):
+    from .lm import lm_loss
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    h = backbone(params, h, cfg, positions)
+    return lm_loss(params, h, labels, cfg), {}
+
+
+# ---------------------------------------------------------------------------
+# serving — rolling-window attention cache + per-layer LRU state
+# ---------------------------------------------------------------------------
+
+def _rec_block_state(lp: Params, x, cfg: ModelConfig):
+    dt = cfg.dtype
+    xn = apply_norm(lp["norm1"], x, cfg)
+    y, state = ops.rg_lru(
+        xn @ lp["x_proj"].astype(dt),
+        xn @ lp["in_gate"].astype(dt),
+        xn @ lp["rec_gate"].astype(dt),
+        lp["Lambda"].astype(jnp.float32),
+        _h(cfg).c,
+        return_state=True,
+    )
+    x = x + y @ lp["out_proj"].astype(dt)
+    return x + apply_mlp(lp["mlp"], apply_norm(lp["norm2"], x, cfg), cfg), state
+
+
+def _attn_block_kv(lp: Params, x, cfg: ModelConfig, positions, W: int):
+    """Windowed attention that also returns the last-W ring cache."""
+    dt = cfg.dtype
+    B, S, D = x.shape
+    xn = apply_norm(lp["norm1"], x, cfg)
+    Hq, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    q = (xn @ lp["attn"]["wq"].astype(dt)).reshape(B, S, Hq, dh)
+    k = (xn @ lp["attn"]["wk"].astype(dt)).reshape(B, S, Hkv, dh)
+    v = (xn @ lp["attn"]["wv"].astype(dt)).reshape(B, S, Hkv, dh)
+    q = ops.rope(q, positions, cfg.rope_theta)
+    k = ops.rope(k, positions, cfg.rope_theta)
+    from repro.kernels import ref as _ref
+    from .layers import _chunked_causal_attention
+    scale = 1.0 / math.sqrt(dh)
+    if S > 1024 and S % 512 == 0:
+        out = _chunked_causal_attention(q, k, v, scale, _h(cfg).window)
+    else:
+        out = _ref.attention(q, k, v, causal=True, scale=scale,
+                             window=_h(cfg).window, positions_q=positions)
+    x = x + out.reshape(B, S, Hq * dh) @ lp["attn"]["wo"].astype(dt)
+    x = x + apply_mlp(lp["mlp"], apply_norm(lp["norm2"], x, cfg), cfg)
+    # ring cache of the last W positions: position p -> slot p mod W
+    lastk, lastv = k[:, -W:], v[:, -W:]
+    slots = jnp.mod(jnp.arange(S - W, S), W)
+    ck = jnp.zeros((B, W, Hkv, dh), dt).at[:, slots].set(lastk.astype(dt))
+    cv = jnp.zeros((B, W, Hkv, dh), dt).at[:, slots].set(lastv.astype(dt))
+    return x, ck, cv
+
+
+def prefill(params: Params, tokens, cfg: ModelConfig, max_len: int | None = None):
+    pat, n_super, n_rest = _layout(cfg)
+    W = min(_h(cfg).window, tokens.shape[1])
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+
+    def super_fn(carry, sp):
+        x = carry
+        lrus, cks, cvs = [], [], []
+        for i, kind in enumerate(pat):
+            lp = sp[f"l{i}"]
+            if kind == "rec":
+                x, st = _rec_block_state(lp, x, cfg)
+                lrus.append(st)
+            else:
+                x, ck, cv = _attn_block_kv(lp, x, cfg, positions, W)
+                cks.append(ck)
+                cvs.append(cv)
+        return x, (jnp.stack(lrus), jnp.stack(cks), jnp.stack(cvs))
+
+    h, (lru, ck, cv) = scan_or_unroll(super_fn, h, params["supers"],
+                                      n_super, cfg.scan_layers)
+    rest_states = []
+    for lp in params["rest"]:
+        h, st = _rec_block_state(lp, h, cfg)
+        rest_states.append(st)
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = (h[:, -1] @ params["lm_head"].astype(cfg.dtype)).astype(jnp.float32)
+    cache = {
+        "lru": lru, "k": ck, "v": cv,
+        "lru_rest": (jnp.stack(rest_states) if rest_states
+                     else jnp.zeros((0, B, _h(cfg).d_rnn or cfg.d_model), jnp.float32)),
+        "length": jnp.asarray(S, jnp.int32),
+    }
+    return logits, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    pat, n_super, n_rest = _layout(cfg)
+    h = _h(cfg)
+    Dr = h.d_rnn or cfg.d_model
+    W = min(h.window, max_len)
+    n_attn_per_super = sum(1 for k in pat if k == "attn")
+    return {
+        "lru": jnp.zeros((n_super, len([k for k in pat if k == "rec"]), batch, Dr),
+                         jnp.float32),
+        "lru_rest": jnp.zeros((n_rest, batch, Dr), jnp.float32),
+        "k": jnp.zeros((n_super, n_attn_per_super, batch, W, cfg.n_kv_heads, cfg.dh),
+                       cfg.dtype),
+        "v": jnp.zeros((n_super, n_attn_per_super, batch, W, cfg.n_kv_heads, cfg.dh),
+                       cfg.dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def _rec_decode(lp, x, state, cfg: ModelConfig):
+    """x: (B, 1, D); state: (B, Dr)."""
+    dt = cfg.dtype
+    h = _h(cfg)
+    xn = apply_norm(lp["norm1"], x, cfg)[:, 0]          # (B, D)
+    xp = xn @ lp["x_proj"].astype(dt)
+    ig = jax.nn.sigmoid((xn @ lp["in_gate"].astype(dt)).astype(jnp.float32))
+    rg = jax.nn.sigmoid((xn @ lp["rec_gate"].astype(dt)).astype(jnp.float32))
+    lam = jax.nn.softplus(lp["Lambda"].astype(jnp.float32))
+    a = jnp.exp(-h.c * lam[None] * rg)
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    new_state = a * state + mult * (ig * xp.astype(jnp.float32))
+    y = new_state.astype(dt)[:, None, :] @ lp["out_proj"].astype(dt)
+    x = x + y
+    return x + apply_mlp(lp["mlp"], apply_norm(lp["norm2"], x, cfg), cfg), new_state
+
+
+def _attn_decode(lp, x, ck, cv, cfg: ModelConfig, length):
+    """Rolling-window cache: slot = length mod W; positions tracked absolutely."""
+    dt = cfg.dtype
+    W = ck.shape[1]
+    B = x.shape[0]
+    xn = apply_norm(lp["norm1"], x, cfg)
+    Hq, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    q = (xn @ lp["attn"]["wq"].astype(dt)).reshape(B, 1, Hq, dh)
+    k = (xn @ lp["attn"]["wk"].astype(dt)).reshape(B, 1, Hkv, dh)
+    v = (xn @ lp["attn"]["wv"].astype(dt)).reshape(B, 1, Hkv, dh)
+    pos = jnp.broadcast_to(length[None], (B, 1)).astype(jnp.int32)
+    q = ops.rope(q, pos, cfg.rope_theta)
+    k = ops.rope(k, pos, cfg.rope_theta)
+    slot = jnp.mod(length, W)
+    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+    # absolute position of each cache slot given the ring layout
+    idx = jnp.arange(W)
+    wraps = jnp.where(idx <= slot, length - slot + idx, length - W - slot + idx)
+    valid = wraps >= 0
+    group = Hq // Hkv
+    kr = jnp.repeat(ck, group, axis=2).astype(jnp.float32)
+    vr = jnp.repeat(cv, group, axis=2).astype(jnp.float32)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kr) / math.sqrt(dh)
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vr).astype(dt).reshape(B, 1, Hq * dh)
+    x = x + out @ lp["attn"]["wo"].astype(dt)
+    return x + apply_mlp(lp["mlp"], apply_norm(lp["norm2"], x, cfg), cfg), ck, cv
+
+
+def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
+    pat, n_super, n_rest = _layout(cfg)
+    B, S = tokens.shape
+    assert S == 1
+    length = cache["length"]
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+
+    def super_fn(carry, xs):
+        x = carry
+        sp, lru, ck, cv = xs
+        ri = ai = 0
+        new_lru, new_k, new_v = [], [], []
+        for i, kind in enumerate(pat):
+            lp = sp[f"l{i}"]
+            if kind == "rec":
+                x, st = _rec_decode(lp, x, lru[ri], cfg)
+                new_lru.append(st)
+                ri += 1
+            else:
+                x, nk, nv = _attn_decode(lp, x, ck[ai], cv[ai], cfg, length)
+                new_k.append(nk)
+                new_v.append(nv)
+                ai += 1
+        return x, (jnp.stack(new_lru), jnp.stack(new_k), jnp.stack(new_v))
+
+    h, (nlru, nk, nv) = scan_or_unroll(
+        super_fn, h, (params["supers"], cache["lru"], cache["k"], cache["v"]),
+        n_super, cfg.scan_layers)
+    rest_states = []
+    for i, lp in enumerate(params["rest"]):
+        h, st = _rec_decode(lp, h, cache["lru_rest"][i], cfg)
+        rest_states.append(st)
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = (h[:, -1] @ params["lm_head"].astype(cfg.dtype)).astype(jnp.float32)
+    new_cache = {
+        "lru": nlru, "k": nk, "v": nv,
+        "lru_rest": jnp.stack(rest_states) if rest_states else cache["lru_rest"],
+        "length": length + 1,
+    }
+    return logits, new_cache

@@ -1,0 +1,210 @@
+"""Mamba-1 LM (falcon-mamba-7b family) — attention-free SSM.
+
+Per block: in_proj -> causal depthwise conv -> SiLU -> selective scan
+(:func:`repro.kernels.ops.mamba_scan`) -> output gate -> out_proj.
+Training scans the sequence inside the kernel; decode carries (conv window,
+SSM state) per layer, so the long_500k cell is O(1) in context length.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .config import ModelConfig, SSMConfig
+from .layers import Params, apply_norm, init_norm, scan_or_unroll
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm or SSMConfig()
+    dm = s.expand * cfg.d_model
+    dtr = s.dt_rank or math.ceil(cfg.d_model / 16)
+    return s, dm, dtr
+
+
+def init_layer(key, cfg: ModelConfig) -> Params:
+    s, dm, dtr = _dims(cfg)
+    D, N = cfg.d_model, s.d_state
+    ks = jax.random.split(key, 7)
+    sc = 1.0 / math.sqrt(D)
+    pd = cfg.param_dtype
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (dm, 1))
+    return {
+        "norm": init_norm(ks[0], cfg),
+        "in_proj": (jax.random.normal(ks[1], (D, 2 * dm)) * sc).astype(pd),
+        "conv_w": (jax.random.normal(ks[2], (s.d_conv, dm)) / math.sqrt(s.d_conv)).astype(pd),
+        "conv_b": jnp.zeros((dm,), pd),
+        "x_proj": (jax.random.normal(ks[3], (dm, dtr + 2 * N)) / math.sqrt(dm)).astype(pd),
+        "dt_proj": (jax.random.normal(ks[4], (dtr, dm)) / math.sqrt(dtr)).astype(pd),
+        "dt_bias": jnp.zeros((dm,), pd),
+        "A_log": jnp.log(A).astype(pd),
+        "D": jnp.ones((dm,), pd),
+        "out_proj": (jax.random.normal(ks[5], (dm, D)) / math.sqrt(dm)).astype(pd),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ke, kl, kh = jax.random.split(key, 3)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(jax.random.split(kl, cfg.n_layers))
+    return {
+        "embed": (jax.random.normal(ke, (cfg.vocab, cfg.d_model)) * 0.02).astype(cfg.param_dtype),
+        "layers": layers,
+        "final_norm": init_norm(kh, cfg),
+        "lm_head": (jax.random.normal(kh, (cfg.d_model, cfg.vocab))
+                    / math.sqrt(cfg.d_model)).astype(cfg.param_dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, S, Dm); w: (K, Dm)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = b.astype(x.dtype)
+    acc = jnp.zeros_like(x) + out
+    for i in range(K):
+        acc = acc + pad[:, i:i + x.shape[1], :] * w[K - 1 - i].astype(x.dtype)
+    return acc
+
+
+def _block(lp: Params, x, cfg: ModelConfig):
+    s, dm, dtr = _dims(cfg)
+    dt_ = cfg.dtype
+    N = s.d_state
+    xz = x @ lp["in_proj"].astype(dt_)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = _causal_conv(xin, lp["conv_w"], lp["conv_b"])
+    xc = jax.nn.silu(xc)
+    dbc = xc @ lp["x_proj"].astype(dt_)
+    dt_lowrank = dbc[..., :dtr]
+    B_ssm = dbc[..., dtr:dtr + N].astype(jnp.float32)
+    C_ssm = dbc[..., dtr + N:].astype(jnp.float32)
+    delta = jax.nn.softplus(
+        (dt_lowrank @ lp["dt_proj"].astype(dt_)) + lp["dt_bias"].astype(dt_))
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    y = ops.mamba_scan(xc, delta, A, B_ssm, C_ssm, lp["D"].astype(jnp.float32))
+    y = y * jax.nn.silu(z)
+    return y @ lp["out_proj"].astype(dt_)
+
+
+def backbone(params: Params, h, cfg: ModelConfig):
+    def body(carry, lp):
+        if cfg.shard_activations:
+            from .layers import scan_or_unroll  # noqa: F401
+            from .sharding import hint_rows
+            carry = hint_rows(carry)
+        x = apply_norm(lp["norm"], carry, cfg)
+        return carry + _block(lp, x, cfg), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    h, _ = scan_or_unroll(body, h, params["layers"], cfg.n_layers,
+                          cfg.scan_layers)
+    return apply_norm(params["final_norm"], h, cfg)
+
+
+def train_forward(params: Params, batch: dict, cfg: ModelConfig):
+    from .lm import lm_loss
+    tokens, labels = batch["tokens"], batch["labels"]
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    h = backbone(params, h, cfg)
+    loss = lm_loss(params, h, labels, cfg)
+    return loss, {}
+
+
+# ---------------------------------------------------------------------------
+# serving — O(1)-in-context state
+# ---------------------------------------------------------------------------
+
+def prefill(params: Params, tokens, cfg: ModelConfig, max_len: int | None = None):
+    """Forward over the prompt, returning (last logits, recurrent cache)."""
+    s, dm, dtr = _dims(cfg)
+    B, S = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+
+    def body(carry, lp):
+        x = apply_norm(lp["norm"], carry, cfg)
+        dt_ = cfg.dtype
+        N = s.d_state
+        xz = x @ lp["in_proj"].astype(dt_)
+        xin, z = jnp.split(xz, 2, axis=-1)
+        xc = jax.nn.silu(_causal_conv(xin, lp["conv_w"], lp["conv_b"]))
+        dbc = xc @ lp["x_proj"].astype(dt_)
+        B_ssm = dbc[..., dtr:dtr + N].astype(jnp.float32)
+        C_ssm = dbc[..., dtr + N:].astype(jnp.float32)
+        delta = jax.nn.softplus((dbc[..., :dtr] @ lp["dt_proj"].astype(dt_))
+                                + lp["dt_bias"].astype(dt_))
+        A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+        y, ssm_state = ops.mamba_scan(xc, delta, A, B_ssm, C_ssm,
+                                      lp["D"].astype(jnp.float32),
+                                      return_state=True)
+        y = (y * jax.nn.silu(z)) @ lp["out_proj"].astype(dt_)
+        conv_state = xin[:, -(s.d_conv - 1):, :]
+        return carry + y, (conv_state.astype(cfg.dtype), ssm_state)
+
+    h, (convs, ssms) = scan_or_unroll(body, h, params["layers"],
+                                      cfg.n_layers, cfg.scan_layers)
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = (h[:, -1] @ params["lm_head"].astype(cfg.dtype)).astype(jnp.float32)
+    cache = {"conv": convs, "ssm": ssms, "length": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    s, dm, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, s.d_conv - 1, dm), cfg.dtype),
+        "ssm": jnp.zeros((cfg.n_layers, batch, dm, s.d_state), jnp.float32),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def _decode_block(lp, x1, conv_st, ssm_st, cfg: ModelConfig):
+    """x1: (B, 1, D); single-token recurrent update."""
+    s, dm, dtr = _dims(cfg)
+    dt_ = cfg.dtype
+    N = s.d_state
+    xz = x1 @ lp["in_proj"].astype(dt_)
+    xin, z = jnp.split(xz, 2, axis=-1)              # (B,1,dm)
+    window = jnp.concatenate([conv_st, xin], axis=1)     # (B, K, dm)
+    new_conv = window[:, 1:, :]
+    # training conv applies w[0] to the CURRENT token and w[K-1] to the
+    # oldest; the window is ordered oldest->current, so flip the taps.
+    w = lp["conv_w"].astype(dt_)[::-1]               # (K, dm)
+    xc = jnp.einsum("bkd,kd->bd", window, w) + lp["conv_b"].astype(dt_)
+    xc = jax.nn.silu(xc)[:, None, :]                 # (B,1,dm)
+    dbc = xc @ lp["x_proj"].astype(dt_)
+    dt_lr = dbc[..., :dtr]
+    B_ssm = dbc[..., dtr:dtr + N].astype(jnp.float32)[:, 0]   # (B,N)
+    C_ssm = dbc[..., dtr + N:].astype(jnp.float32)[:, 0]
+    delta = jax.nn.softplus((dt_lr @ lp["dt_proj"].astype(dt_))
+                            + lp["dt_bias"].astype(dt_))[:, 0].astype(jnp.float32)  # (B,dm)
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))             # (dm,N)
+    xf = xc[:, 0].astype(jnp.float32)
+    dA = jnp.exp(delta[..., None] * A[None])                  # (B,dm,N)
+    dBx = (delta * xf)[..., None] * B_ssm[:, None, :]
+    h = dA * ssm_st + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C_ssm) + lp["D"].astype(jnp.float32) * xf
+    y = (y.astype(dt_) * jax.nn.silu(z[:, 0]))[:, None, :]
+    return (y @ lp["out_proj"].astype(dt_)), new_conv, h
+
+
+def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig):
+    B, S = tokens.shape
+    assert S == 1, "mamba decode is single-token"
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+
+    def body(carry, xs):
+        lp, conv_st, ssm_st = xs
+        x = apply_norm(lp["norm"], carry, cfg)
+        y, nc, nh = _decode_block(lp, x, conv_st, ssm_st, cfg)
+        return carry + y, (nc, nh)
+
+    h, (nconv, nssm) = scan_or_unroll(
+        body, h, (params["layers"], cache["conv"], cache["ssm"]),
+        cfg.n_layers, cfg.scan_layers)
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = (h[:, -1] @ params["lm_head"].astype(cfg.dtype)).astype(jnp.float32)
+    return logits, {"conv": nconv, "ssm": nssm, "length": cache["length"] + 1}

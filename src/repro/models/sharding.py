@@ -1,0 +1,272 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs for any mesh.
+
+Megatron-style TP on the ``model`` axis, DP over ``data`` (x ``pod`` when
+present), EP for MoE experts when the expert count divides the model axis,
+sequence-sharded KV caches for decode.  Rules are name-based over the param
+tree paths, so every architecture (dense / moe / ssm / hybrid / encdec)
+shares one rule table.
+
+Uneven dims: GSPMD pads internally, but padding the *vocab* axis of the
+embedding wastes HBM and inserts masked ops; we only shard an axis when it
+divides evenly, else fall back to replicated for that axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ModelConfig
+
+Params = dict[str, Any]
+
+
+def mesh_axes(mesh: Mesh) -> tuple[tuple[str, ...], str]:
+    """Returns (dp_axes, tp_axis). The 'pod' axis, when present, is outer DP."""
+    names = mesh.axis_names
+    tp = "model" if "model" in names else names[-1]
+    dp = tuple(n for n in names if n != tp)
+    return dp, tp
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+# -- per-leaf rule -----------------------------------------------------------
+
+def _param_spec(path: str, shape: tuple[int, ...], cfg: ModelConfig,
+                mesh: Mesh) -> P:
+    dp, tp = mesh_axes(mesh)
+    tp_n = _axis_size(mesh, tp)
+
+    def shard_if(dim: int, axis=tp):
+        """Spec sharding dimension `dim` on `axis` if divisible."""
+        if shape[dim] % tp_n == 0:
+            return tuple(axis if i == dim else None for i in range(len(shape)))
+        return (None,) * len(shape)
+
+    stacked = path.startswith(("layers.", "supers.", "enc_layers.", "dec_layers."))
+    off = 1 if stacked else 0  # leading layer-stack dim is never sharded
+    d = len(shape)
+
+    def spec(*dims_axes):
+        out = [None] * d
+        for dim, axis in dims_axes:
+            dim += off
+            if dim < d and shape[dim] % tp_n == 0:
+                out[dim] = axis
+        return P(*out)
+
+    leaf = path.split(".")[-1]
+    parent = path.split(".")[-2] if "." in path else ""
+
+    # embeddings / heads
+    if leaf == "embed":
+        return P(tp, None) if shape[0] % tp_n == 0 else P(None, None)
+    if leaf == "lm_head":
+        return P(None, tp) if shape[1] % tp_n == 0 else P(None, None)
+
+    # attention
+    if leaf in ("wq", "wk", "wv"):
+        return spec((1, tp))
+    if leaf == "wo":
+        return spec((0, tp))
+    if leaf in ("bq", "bk", "bv"):
+        return spec((0, tp))
+
+    # MLP
+    if leaf in ("w_gate", "w_up"):
+        if d - off == 3:  # MoE experts (E, D, F)
+            m = cfg.moe
+            if m and m.n_experts % tp_n == 0:
+                return spec((0, tp))          # EP
+            return spec((2, tp))              # TP within expert
+        return spec((1, tp))
+    if leaf == "w_down":
+        if d - off == 3:  # (E, F, D)
+            m = cfg.moe
+            if m and m.n_experts % tp_n == 0:
+                return spec((0, tp))
+            return spec((1, tp))
+        return spec((0, tp))
+    if leaf == "router":
+        return P(*([None] * d))
+
+    # mamba
+    if leaf in ("in_proj", "x_proj", "dt_proj", "out_proj") and cfg.family == "ssm":
+        if leaf in ("in_proj", "dt_proj"):
+            return spec((1, tp))
+        return spec((0, tp))
+    if leaf in ("conv_w",):
+        return spec((1, tp))
+    if leaf in ("conv_b", "dt_bias", "D"):
+        return spec((0, tp))
+    if leaf == "A_log":
+        return spec((0, tp))
+
+    # griffin / rg-lru
+    if leaf in ("x_proj", "in_gate", "rec_gate"):
+        return spec((1, tp))
+    if leaf == "out_proj":
+        return spec((0, tp))
+    if leaf == "Lambda":
+        return spec((0, tp))
+
+    # norms, biases, everything small: replicated
+    return P(*([None] * d))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def param_pspecs(abstract_params: Params, cfg: ModelConfig, mesh: Mesh):
+    """Pytree of PartitionSpec matching the param tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_spec(_path_str(path), leaf.shape, cfg, mesh),
+        abstract_params,
+    )
+
+
+def param_shardings(abstract_params: Params, cfg: ModelConfig, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        param_pspecs(abstract_params, cfg, mesh),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# -- data & cache specs --------------------------------------------------------
+
+def _dp_size(mesh: Mesh) -> int:
+    dp, _ = mesh_axes(mesh)
+    n = 1
+    for a in dp:
+        n *= mesh.shape[a]
+    return n
+
+
+def _dp_if_divisible(mesh: Mesh, dim: int):
+    """The DP axes tuple when `dim` divides evenly, else None (replicate)."""
+    dp, _ = mesh_axes(mesh)
+    return dp if dim % _dp_size(mesh) == 0 else None
+
+
+def batch_pspecs(batch_tree, mesh: Mesh):
+    """Anything with a leading global-batch dim: shard it over all DP axes
+    (replicate when the batch is too small to split, e.g. long_500k B=1)."""
+
+    def spec(leaf):
+        d = len(leaf.shape)
+        if d == 0:
+            return P()
+        return P(_dp_if_divisible(mesh, leaf.shape[0]), *([None] * (d - 1)))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+# decode-cache TP placement: "seq" (baseline: sequence-sharded) or "dh"
+# (head-dim-sharded — keeps the per-token dynamic_update_slice device-local;
+# §Perf decode iteration).  Module-level so drivers can flip it per run.
+CACHE_KV_DIM = "seq"
+
+
+def cache_pspecs(cache_tree, cfg: ModelConfig, mesh: Mesh):
+    """KV caches: (L, B, S, Hkv, dh) -> batch over DP, TP on the sequence or
+    head dim per CACHE_KV_DIM. Recurrent states: batch over DP, channels
+    over TP when divisible."""
+    dp, tp = mesh_axes(mesh)
+    tp_n = _axis_size(mesh, tp)
+
+    def spec(path, leaf):
+        name = _path_str(path)
+        d = len(leaf.shape)
+        if d == 0:
+            return P()
+
+        def dpx(dim_size):
+            return dp if dim_size % _dp_size(mesh) == 0 else None
+
+        if name.endswith(("k", "v")) and d >= 4:
+            out = [None] * d
+            out[d - 4] = dpx(leaf.shape[d - 4])   # batch of (..., B, S, H, dh)
+            if CACHE_KV_DIM == "dh" and leaf.shape[d - 1] % tp_n == 0:
+                out[d - 1] = tp                   # head-dim-sharded KV
+            elif leaf.shape[d - 3] % tp_n == 0:
+                out[d - 3] = tp                   # sequence-sharded KV
+            return P(*out)
+        if name.endswith("ssm") and d == 4:       # (L, B, Dm, N)
+            out = [None, dpx(leaf.shape[1]), None, None]
+            if leaf.shape[2] % tp_n == 0:
+                out[2] = tp
+            return P(*out)
+        if name.endswith(("lru", "lru_rest")) and d >= 3:
+            out = [None] * d
+            out[d - 2] = dpx(leaf.shape[d - 2])
+            if leaf.shape[d - 1] % tp_n == 0:
+                out[d - 1] = tp
+            return P(*out)
+        if name.endswith("conv") and d == 4:      # (L, B, K-1, Dm)
+            out = [None, dpx(leaf.shape[1]), None, None]
+            if leaf.shape[3] % tp_n == 0:
+                out[3] = tp
+            return P(*out)
+        # tokens / enc_out / misc: batch-sharded on first dim when possible
+        out = [None] * d
+        out[0] = dpx(leaf.shape[0])
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+# -- in-graph activation sharding hints ---------------------------------------
+
+def hint(x, *axes):
+    """with_sharding_constraint with graceful degradation: tries the spec
+    with 'pod'+'data' merged DP first, then plain, then no-op (no mesh)."""
+    import jax as _jax
+    from jax.sharding import PartitionSpec as _P
+    variants = [axes]
+    if "data" in axes:
+        variants.insert(0, tuple(("pod", "data") if a == "data" else a
+                                 for a in axes))
+    for spec_axes in variants:
+        try:
+            spec = list(spec_axes) + [None] * (x.ndim - len(spec_axes))
+            return _jax.lax.with_sharding_constraint(x, _P(*spec))
+        except Exception:
+            continue
+    return x
+
+
+def hint_rows(x, row_dim: int = 0):
+    """Constrain `row_dim` of an activation to the DP axes when tracing under
+    a mesh context; silently a no-op otherwise (unit tests, single device).
+
+    Beyond-paper optimization knob (`ModelConfig.shard_activations`): GSPMD
+    sharding propagation can drop the batch sharding across deep unrolled /
+    remat'd stacks, turning per-layer TP all-reduces into full-batch
+    all-reduces; pinning the token dim restores the O(tokens/dp) payload.
+    """
+    import jax as _jax
+    from jax.sharding import PartitionSpec as _P
+    for dp in (("pod", "data"), "data"):
+        try:
+            spec = [None] * x.ndim
+            spec[row_dim] = dp
+            return _jax.lax.with_sharding_constraint(x, _P(*spec))
+        except Exception:
+            continue
+    return x

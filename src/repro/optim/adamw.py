@@ -1,0 +1,112 @@
+"""AdamW with global-norm clipping — pure-JAX, pytree-native.
+
+State layout mirrors params; :func:`opt_state_pspecs` adds ZeRO-1 sharding
+(m/v sharded over the data axis on the first evenly-divisible unsharded
+dimension — optimizer memory scales down with DP size; params stay whole)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+def init(params) -> AdamWState:
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(m=z, v=jax.tree.map(jnp.copy, z),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def update(cfg: AdamWConfig, grads, state: AdamWState, params):
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = state.count + 1
+    lr = schedule(cfg, count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, state.m, grads)
+    new_v = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g, state.v, grads)
+
+    def step_leaf(p, m, v):
+        upd = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+    new_params = jax.tree.map(step_leaf, params, new_m, new_v)
+    return new_params, AdamWState(new_m, new_v, count), {
+        "grad_norm": gnorm, "lr": lr}
+
+
+# -- ZeRO-1 sharding ----------------------------------------------------------
+
+def opt_state_pspecs(state: AdamWState, param_specs, mesh: Mesh,
+                     skip_leading: bool = False) -> AdamWState:
+    """m/v: take the param spec and additionally shard the first unsharded,
+    evenly-divisible dim over the data axis (classic optimizer-state
+    partitioning).
+
+    ``skip_leading``: never shard dim 0 of rank>=2 leaves — dim 0 is the
+    scanned layer-stack axis, and sharding it makes every per-layer slice a
+    cross-shard access (see EXPERIMENTS.md §Perf iteration log)."""
+    from repro.models.sharding import mesh_axes
+    dp, _tp = mesh_axes(mesh)
+    dp_inner = dp[-1]                       # 'data' (not 'pod': DCN too slow)
+    dsize = mesh.shape[dp_inner]
+
+    def zero1(spec: P, leaf):
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        start = 1 if (skip_leading and len(leaf.shape) >= 2) else 0
+        for i, (s, dim) in enumerate(zip(parts, leaf.shape)):
+            if i < start:
+                continue
+            if s is None and dim % dsize == 0 and dim >= dsize:
+                parts[i] = dp_inner
+                break
+        return P(*parts)
+
+    m_specs = jax.tree.map(zero1, param_specs, state.m,
+                           is_leaf=lambda x: isinstance(x, P))
+    return AdamWState(m=m_specs, v=m_specs, count=P())

@@ -1,0 +1,50 @@
+"""int8 gradient compression with error feedback.
+
+Distributed-optimization trick for DCN-bound multi-pod training: gradients
+crossing the slow ``pod`` axis are quantized to int8 (per-leaf absmax scale)
+before the cross-pod all-reduce; the quantization error is carried to the
+next step (error feedback keeps the method unbiased in the long run).
+
+In-graph usage (under pjit, the cast shrinks the all-reduce payload 4x):
+
+    g_q, scales = quantize(grads)
+    g_q = lax.psum(g_q, 'pod')            # int8->int32 accumulate
+    grads = dequantize(g_q, scales, npods)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(tree):
+    """Per-leaf symmetric int8 quantization. Returns (int8 tree, scale tree)."""
+    def q(g):
+        a = jnp.max(jnp.abs(g.astype(jnp.float32)))
+        scale = jnp.maximum(a, 1e-12) / 127.0
+        return jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8), scale
+
+    leaves, treedef = jax.tree.flatten(tree)
+    qs, scales = zip(*(q(l) for l in leaves)) if leaves else ((), ())
+    return jax.tree.unflatten(treedef, qs), jax.tree.unflatten(treedef, scales)
+
+
+def dequantize(qtree, scales, n_shards: int = 1):
+    """Inverse of :func:`quantize`; `n_shards` divides an int32 psum result."""
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s / n_shards, qtree, scales)
+
+
+def compress_with_feedback(grads, error):
+    """Error-feedback wrapper: quantize (grads + carried error), return the
+    int8 payload, scales, and the new error to carry."""
+    adj = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e, grads, error)
+    q, scales = quantize(adj)
+    deq = dequantize(q, scales)
+    new_error = jax.tree.map(lambda a, d: a - d, adj, deq)
+    return q, scales, new_error
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

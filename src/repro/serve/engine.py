@@ -1,0 +1,54 @@
+"""Batched serving engine: prefill + greedy decode over a KV cache.
+
+Single-host reference implementation of the serving loop the decode cells
+lower: requests are padded into a fixed batch, prefilled once, then decoded
+token-by-token with the jitted ``decode_step``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+
+
+@dataclass
+class ServeConfig:
+    batch: int
+    max_len: int
+    max_new_tokens: int = 32
+    eos_id: int = -1     # -1: never stop early (fixed-length benchmark mode)
+
+
+class Engine:
+    def __init__(self, model: Model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._decode = jax.jit(model.decode_step)
+
+    def generate(self, prompts: np.ndarray, **extra) -> np.ndarray:
+        """prompts: (batch, prompt_len) int32 -> (batch, max_new_tokens)."""
+        B, P = prompts.shape
+        assert B == self.cfg.batch
+        logits, cache = self.model.prefill(
+            self.params, jnp.asarray(prompts, jnp.int32), **extra)
+        # decode cache from prefill may be shorter than max_len; re-home it
+        if "k" in cache and cache["k"].ndim == 5 and cache["k"].shape[2] < self.cfg.max_len:
+            pad = self.cfg.max_len - cache["k"].shape[2]
+            cache = dict(cache)
+            cache["k"] = jnp.pad(cache["k"], [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
+            cache["v"] = jnp.pad(cache["v"], [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
+
+        out = []
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        for _ in range(self.cfg.max_new_tokens):
+            out.append(np.asarray(tok))
+            logits, cache = self._decode(self.params, cache, tok, **extra)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return np.concatenate(out, axis=1)

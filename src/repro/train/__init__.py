@@ -1,0 +1,1 @@
+from .step import TrainState, init_state, make_train_step

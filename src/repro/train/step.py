@@ -1,0 +1,73 @@
+"""TrainState + train_step factory: grad accumulation (microbatching),
+clipping, AdamW, metrics — the function the launcher jits with shardings.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+    step: jax.Array
+
+
+def init_state(model: Model, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=adamw.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig,
+                    microbatches: int = 1) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``microbatches > 1`` splits the per-step batch on the leading axis and
+    accumulates grads sequentially (same math, 1/microbatches the activation
+    memory) — gradient accumulation for large global batches."""
+
+    def loss_fn(params, batch):
+        loss, aux = model.train_forward(params, batch)
+        return loss, aux
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, aux), grads = grad_fn(params, batch)
+        return loss, aux, grads
+
+    def accumulated(params, batch):
+        def micro(carry, mb):
+            acc, loss_sum = carry
+            (loss, _aux), grads = grad_fn(params, mb)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return (acc, loss_sum + loss), None
+
+        mbs = jax.tree.map(
+            lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                + x.shape[1:]),
+            batch)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss_sum), _ = jax.lax.scan(micro, (zero, 0.0), mbs)
+        grads = jax.tree.map(lambda g: g / microbatches, grads)
+        return loss_sum / microbatches, {}, grads
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        if microbatches > 1:
+            loss, aux, grads = accumulated(state.params, batch)
+        else:
+            loss, aux, grads = single(state.params, batch)
+        new_params, new_opt, opt_metrics = adamw.update(
+            opt_cfg, grads, state.opt, state.params)
+        metrics = {"loss": loss, "step": state.step + 1, **opt_metrics, **aux}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

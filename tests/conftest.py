@@ -1,0 +1,40 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_softmax_graph(rows=64, cols=256):
+    from repro.core import GraphBuilder
+
+    b = GraphBuilder("softmax")
+    x = b.param("x", (rows, cols))
+    m = b.reduce("max", x, axes=(1,))
+    mb = b.bcast(m, (rows, cols), (0,))
+    e = b.ew("exp", b.ew("sub", x, mb))
+    s = b.reduce("sum", e, axes=(1,))
+    sb = b.bcast(s, (rows, cols), (0,))
+    y = b.ew("div", e, sb)
+    return b.build(outputs=[y]), x, y
+
+
+def make_mlp_norm_graph(rows=128, d=256):
+    """gemm + layernorm-ish + activation: mixes all op classes."""
+    from repro.core import GraphBuilder
+
+    b = GraphBuilder("mlp_norm")
+    x = b.param("x", (rows, d))
+    w = b.param("w", (d, d))
+    g = b.param("gamma", (d,))
+    h = b.dot(x, w, name="dot_0")
+    mu = b.reduce("mean", h, axes=(1,), keepdims=True)
+    dlt = b.ew("sub", h, b.bcast(mu, (rows, d), (0, 1)))
+    v = b.reduce("mean", b.ew("square", dlt), axes=(1,), keepdims=True)
+    r = b.ew("rsqrt", b.ew("add", v, b.const("eps", ())))
+    y = b.ew("mul", b.ew("mul", dlt, b.bcast(r, (rows, d), (0, 1))),
+             b.bcast(g, (rows, d), (1,)))
+    z = b.ew("relu", y)
+    return b.build(outputs=[z])

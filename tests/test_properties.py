@@ -1,0 +1,149 @@
+"""Hypothesis property tests on the fusion system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CostModel, FusionPattern, GraphBuilder, ILPSolver, ScratchAllocator,
+    build_reference_fn, generate_patterns, solve_fusion_plan,
+)
+from repro.core.ilp import _find_cycle_patterns
+
+
+# -------------------------------------------------- random DAG strategy -----
+
+@st.composite
+def random_graph(draw):
+    """Random elementwise/reduction/broadcast DAG over (r, c) tensors."""
+    r = draw(st.sampled_from([8, 16, 32]))
+    c = draw(st.sampled_from([16, 64, 128]))
+    n_params = draw(st.integers(1, 3))
+    n_ops = draw(st.integers(2, 14))
+    b = GraphBuilder("rand")
+    mat = [b.param(f"p{i}", (r, c)) for i in range(n_params)]  # (r,c) pool
+    vec = []                                                   # (r,) pool
+    unary = ["exp", "neg", "relu", "tanh", "square", "abs"]
+    binary = ["add", "mul", "sub", "max", "min"]
+    for i in range(n_ops):
+        kind = draw(st.sampled_from(
+            ["unary", "binary", "reduce", "bcast" if vec else "unary"]))
+        if kind == "unary":
+            mat.append(b.ew(draw(st.sampled_from(unary)),
+                            draw(st.sampled_from(mat))))
+        elif kind == "binary":
+            mat.append(b.ew(draw(st.sampled_from(binary)),
+                            draw(st.sampled_from(mat)),
+                            draw(st.sampled_from(mat))))
+        elif kind == "reduce":
+            vec.append(b.reduce(draw(st.sampled_from(["sum", "max"])),
+                                draw(st.sampled_from(mat)), axes=(1,)))
+        else:
+            mat.append(b.bcast(draw(st.sampled_from(vec)), (r, c), (0,)))
+    outs = draw(st.lists(st.sampled_from(mat + (vec or mat)),
+                         min_size=1, max_size=3, unique=True))
+    return b.build(outputs=list(dict.fromkeys(outs))), r, c
+
+
+@st.composite
+def packing_instance(draw):
+    n = draw(st.integers(1, 14))
+    w = [draw(st.floats(0.1, 10.0)) for _ in range(n)]
+    overlaps = [set() for _ in range(n)]
+    for i in range(n):
+        for j in range(i + 1, n):
+            if draw(st.booleans()):
+                overlaps[i].add(j)
+                overlaps[j].add(i)
+    return w, overlaps
+
+
+# ------------------------------------------------------------- properties ---
+
+@settings(max_examples=25, deadline=None)
+@given(random_graph())
+def test_plan_invariants(gr):
+    """Any plan: patterns disjoint, contracted graph acyclic, scores > 0."""
+    g, r, c = gr
+    pats = generate_patterns(g)
+    cost = CostModel()
+    scores = [cost.score(p).score for p in pats]
+    res = solve_fusion_plan(g, pats, scores)
+    seen = set()
+    for i, p in enumerate(res.chosen):
+        assert not (p.members & seen)
+        seen |= p.members
+    assert _find_cycle_patterns(g, res.chosen) is None
+    assert res.objective >= 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(random_graph(), st.integers(0, 2**31 - 1))
+def test_stitch_mode_matches_oracle(gr, seed):
+    """Compiled stitch-mode execution == pure-jnp oracle on random DAGs."""
+    from repro.core import StitchCompiler
+    g, r, c = gr
+    rng = np.random.default_rng(seed)
+    inputs = {n: rng.uniform(-2, 2, size=g[n].shape).astype(np.float32)
+              for n in g.nodes if g[n].is_source()}
+    ref = build_reference_fn(g)(inputs)
+    out = StitchCompiler(mode="stitch").compile(g)(inputs)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(packing_instance())
+def test_ilp_optimality_vs_bruteforce(inst):
+    """B&B solution == brute-force optimum for small instances."""
+    w, overlaps = inst
+    n = len(w)
+    sel, val = ILPSolver(w, overlaps).solve()
+    best = 0.0
+    for mask in range(1 << n):
+        chosen = [i for i in range(n) if mask >> i & 1]
+        ok = all(j not in overlaps[i]
+                 for a, i in enumerate(chosen) for j in chosen[a + 1:])
+        if ok:
+            best = max(best, sum(w[i] for i in chosen))
+    assert abs(val - best) < 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_graph(), st.data())
+def test_scratch_allocator_soundness(gr, data):
+    """alloc <= request; every requesting op gets a buffer >= its request;
+    two ops sharing a buffer are never live simultaneously."""
+    g, r, c = gr
+    candidates = [n.name for n in g.compute_nodes()]
+    if not candidates:
+        return
+    req_ops = data.draw(st.lists(st.sampled_from(candidates), min_size=1,
+                                 max_size=min(6, len(candidates)), unique=True))
+    req = {n: int(g[n].bytes) for n in req_ops}
+    plan = ScratchAllocator(g).allocate(req)
+    assert plan.allocated <= plan.requested
+    for op, buf in plan.assignment.items():
+        assert plan.buffers[buf] >= req[op]
+    # liveness check: if two ops share a buffer, the later one (topo order)
+    # must post-dominate the earlier one
+    from repro.core.scratch import _postdom_idom, post_dominates
+    idom = _postdom_idom(g)
+    topo = {n: i for i, n in enumerate(g.topo_order())}
+    by_buf: dict[int, list[str]] = {}
+    for op, buf in plan.assignment.items():
+        by_buf.setdefault(buf, []).append(op)
+    for buf, ops_ in by_buf.items():
+        ops_ = sorted(ops_, key=lambda o: topo[o])
+        for a, bnode in zip(ops_, ops_[1:]):
+            assert post_dominates(idom, bnode, a), \
+                f"{bnode} reuses {a}'s buffer but does not post-dominate it"
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 30), st.floats(1.0, 3.0))
+def test_bandwidth_model_monotone(exp, mult):
+    from repro.core import TPU_V5E
+    v = 2 ** exp
+    assert TPU_V5E.mem_time(v * mult) >= TPU_V5E.mem_time(v)
+    assert 0 < TPU_V5E.efficiency(v) < 1

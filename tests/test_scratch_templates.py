@@ -1,0 +1,116 @@
+"""Dominance-tree scratch allocator (Alg. 4) + template grammar (§5.2)."""
+
+import pytest
+
+from repro.core import (
+    GraphBuilder, ScratchAllocator, parse_template, post_dominates,
+)
+from repro.core.scratch import _postdom_idom
+
+
+def _chain_graph():
+    """x -> a -> b -> c -> out : b post-dominates a, c post-dominates b."""
+    b = GraphBuilder("chain")
+    x = b.param("x", (64, 64))
+    a = b.ew("exp", x)
+    bb = b.ew("neg", a)
+    c = b.ew("relu", bb)
+    g = b.build(outputs=[c])
+    return g, (x, a, bb, c)
+
+
+def test_postdominance_chain():
+    g, (x, a, bb, c) = _chain_graph()
+    idom = _postdom_idom(g)
+    assert post_dominates(idom, bb, a)
+    assert post_dominates(idom, c, a)
+    assert not post_dominates(idom, a, bb)
+
+
+def test_postdominance_diamond():
+    # a feeds b and c; d consumes both: d postdominates a; b does NOT.
+    gb = GraphBuilder("diamond")
+    x = gb.param("x", (8, 8))
+    a = gb.ew("exp", x)
+    b = gb.ew("neg", a)
+    c = gb.ew("relu", a)
+    d = gb.ew("add", b, c)
+    g = gb.build(outputs=[d])
+    idom = _postdom_idom(g)
+    assert post_dominates(idom, d, a)
+    assert not post_dominates(idom, b, a)
+    assert not post_dominates(idom, c, a)
+
+
+def test_scratch_reuse_in_chain():
+    g, (x, a, bb, c) = _chain_graph()
+    plan = ScratchAllocator(g).allocate({a: 1024, bb: 1024, c: 1024})
+    # each op post-dominates its producer -> single 1KB buffer reused 3x
+    assert plan.requested == 3072
+    assert plan.allocated == 1024
+    assert plan.alloc_over_req == pytest.approx(1 / 3)
+
+
+def test_scratch_no_reuse_across_parallel_branches():
+    gb = GraphBuilder("diamond")
+    x = gb.param("x", (8, 8))
+    a = gb.ew("exp", x)
+    b = gb.ew("neg", a)
+    c = gb.ew("relu", a)
+    d = gb.ew("add", b, c)
+    g = gb.build(outputs=[d])
+    plan = ScratchAllocator(g).allocate({b: 512, c: 512})
+    # b and c are live simultaneously: no sharing possible
+    assert plan.allocated == 1024
+
+
+def test_scratch_size_gate():
+    g, (x, a, bb, c) = _chain_graph()
+    # c requests more than a's buffer -> cannot Share it, allocates fresh
+    plan = ScratchAllocator(g).allocate({a: 512, c: 1024})
+    assert plan.allocated == 1536
+
+
+def test_paper_example_dot_then_add_reuse():
+    """Paper §5.4: 'the add can reuse the space allocated for the dot_1'."""
+    gb = GraphBuilder("fig1")
+    x = gb.param("x", (94, 94))
+    w = gb.param("w", (94, 94))
+    dot1 = gb.dot(x, w, name="dot_1")
+    add = gb.ew("add", dot1, x)
+    out = gb.reduce("sum", add, axes=(1,))
+    g = gb.build(outputs=[out])
+    sz = 94 * 94 * 4
+    plan = ScratchAllocator(g).allocate({dot1: sz, add: sz})
+    assert plan.allocated == sz, "add must reuse dot_1's scratch"
+
+
+# ------------------------------------------------------------- templates ----
+
+def test_template_roundtrip():
+    t = parse_template("reduce_1[GRID,SUBLANE,SUBLANE,LANE]S; mul_1[GRID,LANE];")
+    assert len(t.schedules) == 2
+    assert t.schedules[0].scratch and not t.schedules[1].scratch
+    assert str(t) == "reduce_1[GRID,SUBLANE,SUBLANE,LANE]S; mul_1[GRID,LANE];"
+
+
+def test_template_accepts_paper_gpu_spelling():
+    t = parse_template("reduce_1[GRID,WARP,WARP,CTA]S;")
+    assert [a.primary for a in t.schedules[0].attrs] == \
+        ["GRID", "SUBLANE", "SUBLANE", "LANE"]
+
+
+def test_template_multilevel_tiling():
+    t = parse_template("op[GRID_128-SUBLANE_2,LANE];")
+    lv = t.schedules[0].attrs[0].levels
+    assert (lv[0].kind, lv[0].factor) == ("GRID", 128)
+    assert (lv[1].kind, lv[1].factor) == ("SUBLANE", 2)
+
+
+def test_template_rejects_garbage():
+    with pytest.raises(ValueError):
+        parse_template("op[GRID")
+    with pytest.raises(ValueError):
+        parse_template("op[BANANA];")
+    with pytest.raises(ValueError):
+        parse_template("")

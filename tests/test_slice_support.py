@@ -1,0 +1,50 @@
+"""Regression guard: SLICE is a first-class fusible op (the mamba-glue
+finding in EXPERIMENTS §Perf 4.3-3: opaque slices fragmented every plan)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import OpKind, StitchCompiler, build_reference_fn
+from repro.core.trace import trace_to_graph
+
+
+def test_traced_slices_are_fusible_not_custom():
+    def f(x):
+        a, b = x[:, :32], x[:, 32:]
+        return jax.nn.silu(a) * jnp.tanh(b)
+
+    x = np.random.randn(64, 64).astype("float32")
+    g, names = trace_to_graph(f, x)
+    kinds = {n.kind for n in g.compute_nodes()}
+    assert OpKind.SLICE in kinds
+    assert OpKind.CUSTOM not in kinds
+    cg = StitchCompiler(mode="stitch").compile(g)
+    assert cg.stats.n_kernels == 1, "slices must not fragment the plan"
+    out = cg({names[0]: x})
+    ref = build_reference_fn(g)({names[0]: x})
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_row_axis_slice_rejected_by_emitter():
+    """Slicing the row axis is not row-local: emitter must refuse (falls
+    back to fused-jnp), never silently mis-evaluate."""
+    from repro.core import FusionPattern
+    from repro.kernels.stitched import StitchInfeasible, analyze_pattern
+    from repro.core.ir import GraphBuilder
+
+    b = GraphBuilder("rowslice")
+    x = b.param("x", (64, 16))
+    s = b.slice_(x, (0, 0), (32, 16))
+    y = b.ew("exp", s)
+    z = b.ew("neg", b.ew("relu", x))
+    g = b.build(outputs=[y, z])
+    p = FusionPattern(g, frozenset([s, y, z, "relu"]))
+    try:
+        ana = analyze_pattern(p)
+        # acceptable only if it found a consistent non-64 row space
+        assert ana.rows != 64 or ana.roles[s] != "row"
+    except StitchInfeasible:
+        pass  # refusal is the expected outcome
