@@ -8,15 +8,21 @@ Sections:
   Table 3  kernel compression + modeled speedup (TF / XLA / FusionStitching)
   Fig. 6   fusion-pattern class composition
   Table 4  scratch (VMEM/shared) statistics incl. Alg.4 alloc/req
+  Cache    StitchCache cold vs warm compile times (same-graph recompile and
+           record replay onto a freshly built isomorphic graph)
   Perf     measured interpret-mode execution of stitched kernels vs oracle
            on the classic patterns (CPU wall time, correctness evidence)
 
-Output: ``name,us_per_call,derived`` CSV rows per section.
+Output: ``name,us_per_call,derived`` CSV rows per section.  With
+``--json PATH`` a machine-readable BENCH record (per-workload kernel
+counts, modeled step times, cache cold/warm compile times) is also written
+— the start of the perf trajectory across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -61,7 +67,13 @@ def table3(graphs, cost: CostModel):
                t_tf / t_xla, t_tf / t_fs, t_xla / t_fs)
         ratios_k.append(row[2])
         ratios_p.append(row[5])
-        results[name] = row
+        results[name] = {
+            "graph_size": len(g.nodes),
+            "kernels": {"off": k_tf, "xla": k_xla, "stitch": k_fs},
+            "modeled_time_s": {"off": t_tf, "xla": t_xla, "stitch": t_fs},
+            "compression_fs_over_xla": row[2],
+            "speedup_fs_over_xla": row[5],
+        }
         print(f"{name},{row[0]:.2f},{row[1]:.2f},{row[2]:.2f},"
               f"{row[3]:.2f},{row[4]:.2f},{row[5]:.2f}")
     gk = float(np.exp(np.mean(np.log(ratios_k))))
@@ -156,6 +168,52 @@ def table4(graphs, cost: CostModel):
         print(f"{name},{pt:.2f},{avg:.1f},{mx:.1f},{aor:.2f}")
 
 
+def cache_timing(graphs, cost: CostModel, quick: bool) -> dict:
+    """StitchCache amortization: cold (full pattern-gen + ILP + tuning)
+    vs warm (same-graph recompile through the live memo) vs replay (plan
+    record applied to a freshly built isomorphic graph)."""
+    from repro.cache import StitchCache
+    from .workloads import build_all
+
+    print("\n# Cache — StitchCache cold/warm compile times")
+    print("name,cold_ms,warm_ms,replay_ms,warm_speedup,replay_speedup")
+    rebuilt = {} if quick else build_all()
+    out = {}
+    warm_ratios = []
+    for name, g in graphs.items():
+        cache = StitchCache()
+        comp = StitchCompiler(hw=cost.hw, mode="stitch", cache=cache)
+        t0 = time.perf_counter()
+        comp.compile(g)
+        cold = time.perf_counter() - t0
+        comp.compile(g)                    # absorb one-time warm-path setup
+        t0 = time.perf_counter()
+        warm_cg = comp.compile(g)
+        warm = time.perf_counter() - t0
+        assert warm_cg.stats.cache_status == "hit"
+        replay = None
+        if name in rebuilt:
+            t0 = time.perf_counter()
+            replay_cg = comp.compile(rebuilt[name])
+            replay = time.perf_counter() - t0
+            assert replay_cg.stats.cache_status == "hit"
+        warm_ratios.append(cold / max(warm, 1e-9))
+        out[name] = {
+            "cold_compile_s": cold,
+            "warm_compile_s": warm,
+            "replay_compile_s": replay,
+            "warm_speedup": cold / max(warm, 1e-9),
+            "replay_speedup": cold / max(replay, 1e-9) if replay else None,
+        }
+        replay_ms = "" if replay is None else f"{replay * 1e3:.2f}"
+        replay_x = "" if replay is None else f"{cold / max(replay, 1e-9):.0f}x"
+        print(f"{name},{cold * 1e3:.2f},{warm * 1e3:.3f},{replay_ms},"
+              f"{cold / max(warm, 1e-9):.0f}x,{replay_x}")
+    geo = float(np.exp(np.mean(np.log(warm_ratios))))
+    print(f"GEOMEAN,warm_speedup={geo:.0f}x")
+    return {"per_workload": out, "warm_speedup_geomean": geo}
+
+
 def perf_measured(quick: bool):
     """Wall-clock interpret-mode stitched kernels vs unfused jnp on the
     canonical patterns — correctness + relative-ordering evidence."""
@@ -195,6 +253,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--hw", default="V100", choices=["V100", "TPU_V5E"])
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a BENCH_*.json-style record of per-workload "
+                         "kernel counts, modeled step times and cache "
+                         "cold/warm compile times")
     args = ap.parse_args(sys.argv[1:])
     cost = CostModel(V100 if args.hw == "V100" else TPU_V5E)
 
@@ -204,11 +266,25 @@ def main() -> None:
           f"(sizes: {', '.join(f'{k}={len(v.nodes)}' for k, v in graphs.items())})")
 
     table2(graphs, cost)
-    table3(graphs, cost)
+    workloads = table3(graphs, cost)
     fig6(graphs)
     fig7_fig8(graphs, cost)
     table4(graphs, cost)
+    cache = cache_timing(graphs, cost, args.quick)
     perf_measured(args.quick)
+
+    if args.json:
+        record = {
+            "bench": "fusionstitching",
+            "hw": cost.hw.name,
+            "unix_time": time.time(),
+            "quick": args.quick,
+            "workloads": workloads,
+            "cache": cache,
+        }
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"\n# wrote {args.json}")
 
 
 if __name__ == "__main__":

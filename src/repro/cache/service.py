@@ -1,0 +1,352 @@
+"""StitchCache facade + compilation service (miss-then-upgrade).
+
+:class:`StitchCache` binds the three lower pieces together — signatures
+(:mod:`.signature`), bucketing/eviction (:mod:`.policy`), and the two-tier
+store (:mod:`.store`) — behind two operations:
+
+* ``lookup(g, compiler)``  — signature the graph, probe the store, and on a
+  hit *replay* the record: rebuild executable groups on the new graph
+  (canonical indices -> this graph's node names), re-instantiating stitched
+  Pallas callables from the recorded ``(row_block, scratch)`` choice.  The
+  expensive head of compilation — pattern generation, ILP solving, template
+  enumeration — is skipped entirely.
+* ``insert(g, compiled)``  — extract a :class:`PlanRecord` in canonical
+  coordinates from a freshly compiled graph and write it through both tiers.
+
+:class:`CompilationService` is the serving-path wrapper: ``compile_or_
+fallback`` answers *immediately* — with the replayed stitched executable on
+a hit, or with a cheap unfused/XLA-mode executable on a miss — while a
+background thread runs the full stitch pipeline and populates the cache, so
+the *next* request for the same (graph, bucket) upgrades to stitched
+kernels.  Tail latency never pays the tuner's cost.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+import threading
+import time
+
+from repro.core.compiler import CompiledGraph, FusionStats, StitchCompiler, _Group
+from repro.core.cost import HardwareModel, TPU_V5E
+from repro.core.ir import Graph
+from repro.core.pattern import FusionPattern
+from repro.core.tuner import grid_row_block
+
+from .policy import BucketPolicy, BucketStats, EvictionPolicy
+from .signature import GraphSignature, compute_signature
+from .store import DiskStore, GroupRecord, MemoryStore, PlanRecord, TwoTierStore
+
+__all__ = ["StitchCache", "CompilationService", "extract_record", "replay_record"]
+
+
+def extract_record(
+    g: Graph,
+    sig: GraphSignature,
+    compiled: CompiledGraph,
+    bucket_key: str,
+    hw: str,
+    solve_seconds: float = 0.0,
+) -> PlanRecord:
+    """Freeze a compiled plan into canonical coordinates."""
+    idx = sig.node_to_index
+    groups = []
+    for grp in compiled.groups:
+        row_block = None
+        scratch: tuple[int, ...] = ()
+        if grp.tuned is not None:
+            row_block = grid_row_block(grp.tuned.template)
+            scratch = tuple(sorted(idx[n] for n in grp.tuned.template.scratch_ops))
+        groups.append(
+            GroupRecord(
+                members=tuple(sorted(idx[m] for m in grp.members)),
+                kind=grp.kind,
+                row_block=row_block,
+                scratch=scratch,
+            )
+        )
+    ilp = compiled.stats.ilp
+    return PlanRecord(
+        graph_key=sig.graph_key,
+        bucket_key=bucket_key,
+        shape_key=sig.shape_key,
+        mode=compiled.stats.mode,
+        hw=hw,
+        n_nodes=len(sig.canon_order),
+        groups=tuple(groups),
+        objective=ilp.objective if ilp else 0.0,
+        ilp_iterations=ilp.iterations if ilp else 0,
+        solve_seconds=solve_seconds,
+    )
+
+
+def replay_record(
+    g: Graph, sig: GraphSignature, rec: PlanRecord, compiler: StitchCompiler
+) -> CompiledGraph | None:
+    """Rebuild an executable from a record, skipping search/solve/tune.
+
+    Returns None when the record cannot apply (node-count mismatch from a
+    hash collision) — the caller falls back to a cold compile.  Pallas
+    groups that fail to re-instantiate at this graph's concrete shapes
+    (bucketed hit at a new length outside the kernel's feasible blocks)
+    degrade to fused-jnp groups; numerics are unaffected.
+    """
+    if rec.n_nodes != len(sig.canon_order):
+        return None
+    names = sig.canon_order
+    n = len(names)
+    for gr in rec.groups:          # corrupt/hand-edited records: treat as miss
+        if any(not 0 <= i < n for i in gr.members + gr.scratch):
+            return None
+    stats = FusionStats(
+        mode=compiler.mode,
+        n_ops=len(g.compute_nodes()),
+        n_kernels=0,
+        cache_status="hit",
+    )
+    groups: list[_Group] = []
+    covered: set[str] = set()
+    for gr in rec.groups:
+        members = frozenset(names[i] for i in gr.members)
+        covered |= members
+        if gr.kind == "op" or len(members) == 1 and gr.kind != "pallas":
+            groups.append(_Group(members, "op"))
+            continue
+        p = FusionPattern(g, members, "cache")
+        stats.pattern_classes[p.pattern_class] = (
+            stats.pattern_classes.get(p.pattern_class, 0) + 1
+        )
+        tuned = None
+        if gr.kind == "pallas" and compiler.use_pallas:
+            tuned = compiler.tuner.instantiate(
+                p,
+                row_block=gr.row_block,
+                scratch_names=[names[i] for i in gr.scratch],
+            )
+        if tuned is not None:
+            groups.append(_Group(members, "pallas", tuned))
+            stats.pallas_groups += 1
+            stats.scratch_requested += sum(compiler.cost.scratch_request(p).values())
+            stats.scratch_allocated += tuned.scratch_plan.allocated
+            if tuned.scratch_plan.allocated:
+                stats.patterns_with_scratch += 1
+        else:
+            groups.append(_Group(members, "jnp"))
+    # a record always covers every compute node of an isomorphic graph, but
+    # degrade gracefully if it somehow doesn't
+    for node in g.compute_nodes():
+        if node.name not in covered:
+            groups.append(_Group(frozenset([node.name]), "op"))
+    stats.n_kernels = len(groups)
+    stats.modeled_time = compiler.modeled_time(g, [grp.members for grp in groups])
+    return CompiledGraph(g, groups, stats)
+
+
+class StitchCache:
+    """Thread-safe two-tier fusion-plan cache with shape bucketing."""
+
+    def __init__(
+        self,
+        directory: str | None = None,
+        bucket_policy: BucketPolicy | None = None,
+        eviction: EvictionPolicy | None = None,
+    ):
+        eviction = eviction or EvictionPolicy()
+        self.bucket_policy = bucket_policy or BucketPolicy()
+        disk = (
+            DiskStore(directory, max_entries=eviction.disk_entries)
+            if directory is not None
+            else None
+        )
+        self.store = TwoTierStore(MemoryStore(eviction.memory_entries), disk)
+        self.stats = BucketStats()
+        self._lock = threading.RLock()
+        # Live-artifact memo: (id(graph), mode, hw, use_pallas) -> (graph,
+        # artifact, bucket, node count at memo time).  Replay on a record rebuilds
+        # Pallas callables (cheap but not free); recompiling the *same*
+        # unmutated Graph object can skip even that.  The value holds a
+        # strong ref to the graph so the id key cannot be recycled.
+        self._live: "dict[tuple, tuple[Graph, CompiledGraph, str, int]]" = {}
+        self._live_capacity = eviction.memory_entries
+
+    # -- keys -----------------------------------------------------------------
+    def key_for(self, sig: GraphSignature, mode: str = "stitch",
+                hw: str = "") -> tuple:
+        # hw is part of the durable key: a plan tuned for one chip's launch
+        # latency / on-chip budget must not shadow the other chip's optimum
+        return (sig.graph_key, sig.bucket_key(self.bucket_policy), mode, hw)
+
+    def signature_of(self, g: Graph) -> GraphSignature:
+        return compute_signature(g)
+
+    # -- operations -----------------------------------------------------------
+    def lookup(
+        self,
+        g: Graph,
+        compiler: StitchCompiler,
+        sig: GraphSignature | None = None,
+        count: bool = True,
+    ) -> CompiledGraph | None:
+        live_key = (id(g), compiler.mode, compiler.hw.name, compiler.use_pallas)
+        with self._lock:
+            live = self._live.get(live_key)
+        if live is not None and live[0] is g and live[3] == len(g.nodes):
+            if count:
+                with self._lock:
+                    self.stats.record(live[2], hit=True)
+            art = copy.copy(live[1])   # fresh stats: don't rewrite the miss's
+            art.stats = dataclasses.replace(live[1].stats, cache_status="hit")
+            return art
+        sig = sig or compute_signature(g)
+        key = self.key_for(sig, compiler.mode, compiler.hw.name)
+        with self._lock:
+            rec = self.store.get(key)
+        compiled = None
+        if rec is not None:
+            try:
+                compiled = replay_record(g, sig, rec, compiler)
+            except Exception:
+                compiled = None            # unreplayable record == miss
+            if compiled is not None:
+                self._remember_live(g, compiled, compiler, key[1])
+        if count:
+            with self._lock:
+                self.stats.record(key[1], hit=compiled is not None)
+        return compiled
+
+    def _remember_live(self, g: Graph, compiled: CompiledGraph, compiler,
+                       bucket: str) -> None:
+        with self._lock:
+            if len(self._live) >= self._live_capacity:
+                self._live.clear()
+            self._live[(id(g), compiler.mode, compiler.hw.name,
+                        compiler.use_pallas)] = (g, compiled, bucket, len(g.nodes))
+
+    def insert(
+        self,
+        g: Graph,
+        compiled: CompiledGraph,
+        sig: GraphSignature | None = None,
+        solve_seconds: float = 0.0,
+        compiler: StitchCompiler | None = None,
+    ) -> PlanRecord:
+        sig = sig or compute_signature(g)
+        bucket = sig.bucket_key(self.bucket_policy)
+        hw = compiler.hw.name if compiler is not None else ""
+        rec = extract_record(g, sig, compiled, bucket, hw, solve_seconds)
+        with self._lock:
+            self.store.put(rec)
+        if compiler is not None:
+            self._remember_live(g, compiled, compiler, bucket)
+        return rec
+
+    def report(self) -> dict:
+        with self._lock:
+            out = self.stats.as_dict()
+            out["memory_entries"] = len(self.store.memory)
+            out["memory_evictions"] = self.store.memory.evictions
+            out["disk_put_errors"] = self.store.disk_put_errors
+            if self.store.disk is not None:
+                out["disk_entries"] = len(self.store.disk)
+        return out
+
+
+class CompilationService:
+    """Warm-start compilation frontend for the serving tier."""
+
+    def __init__(
+        self,
+        cache: StitchCache | None = None,
+        hw: HardwareModel = TPU_V5E,
+        fallback_mode: str = "xla",
+        gen_cfg=None,
+        use_pallas: bool = True,
+        max_background: int = 2,
+    ):
+        assert fallback_mode in ("off", "xla")
+        self.cache = cache or StitchCache()
+        self.hw = hw
+        self.fallback_mode = fallback_mode
+        self.gen_cfg = gen_cfg
+        self.use_pallas = use_pallas
+        self.max_background = max_background
+        self._lock = threading.Lock()
+        self._pending: set[tuple] = set()
+        self._threads: list[threading.Thread] = []
+        self.last_error: str | None = None   # last background-compile failure
+
+    def compiler(self, mode: str) -> StitchCompiler:
+        return StitchCompiler(
+            hw=self.hw,
+            mode=mode,
+            gen_cfg=self.gen_cfg,
+            use_pallas=self.use_pallas,
+            cache=self.cache if mode == "stitch" else None,
+        )
+
+    def compile(self, g: Graph) -> CompiledGraph:
+        """Blocking cache-aware full compile (offline / warmup path)."""
+        return self.compiler("stitch").compile(g)
+
+    def compile_or_fallback(self, g: Graph) -> tuple[CompiledGraph, str]:
+        """Never blocks on the stitch pipeline.
+
+        Returns ``(executable, status)`` where status is ``"hit"`` (replayed
+        stitched plan), ``"pending"`` (a background compile for this key is
+        already in flight, or the worker cap deferred it), or ``"miss"``
+        (fallback returned now, upgrade kicked off in the background).
+        """
+        stitch = self.compiler("stitch")
+        sig = compute_signature(g)
+        hit = self.cache.lookup(g, stitch, sig=sig)
+        if hit is not None:
+            return hit, "hit"
+        fallback = self.compiler(self.fallback_mode).compile(g)
+        spawned = self.ensure_compiling(g, sig=sig)
+        return fallback, "miss" if spawned else "pending"
+
+    def ensure_compiling(self, g: Graph, sig: GraphSignature | None = None) -> bool:
+        """Kick the background stitch compile for ``g`` unless one is already
+        in flight for its key.  Returns True when a new compile was spawned.
+        A dropped request (worker cap hit on a cold-start burst, or an
+        earlier compile that raised) is re-kicked by calling this again;
+        engines poll it while still un-upgraded."""
+        sig = sig or compute_signature(g)
+        key = self.cache.key_for(sig, "stitch", self.hw.name)
+        with self._lock:
+            self._threads = [x for x in self._threads if x.is_alive()]
+            if key in self._pending:
+                return False
+            if len(self._threads) >= self.max_background:
+                # bounded worker count: don't stack N ILP+tuning pipelines on
+                # a cold-start burst; this key retries on a later call
+                return False
+            self._pending.add(key)
+        stitch = self.compiler("stitch")
+
+        def _upgrade():
+            try:
+                stitch.compile(g, bypass_cache_lookup=True)
+            except Exception as e:          # surfaced via last_error / report
+                with self._lock:
+                    self.last_error = f"{type(e).__name__}: {e}"
+            finally:
+                with self._lock:
+                    self._pending.discard(key)
+
+        t = threading.Thread(target=_upgrade, daemon=True, name="stitch-upgrade")
+        with self._lock:
+            self._threads.append(t)
+        t.start()
+        return True
+
+    def wait(self, timeout: float | None = None) -> None:
+        """Join in-flight background compiles (tests / orderly shutdown)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            threads = list(self._threads)
+        for t in threads:
+            t.join(
+                None if deadline is None else max(0.0, deadline - time.monotonic())
+            )

@@ -20,6 +20,7 @@ allocation statistics (Table 4).
 from __future__ import annotations
 
 import math
+import time as _time
 from dataclasses import dataclass, field
 from typing import Callable, Mapping
 
@@ -105,6 +106,8 @@ class FusionStats:
     patterns_with_scratch: int = 0
     pallas_groups: int = 0           # groups executed as stitched Pallas
     ilp: PlanResult | None = None
+    cache_status: str = "off"        # "off" | "miss" | "hit"
+    compile_seconds: float = 0.0     # wall time spent producing this artifact
 
     @property
     def compression(self) -> float:
@@ -201,6 +204,7 @@ class StitchCompiler:
         gen_cfg: GenConfig | None = None,
         execution_based_eval: bool = False,
         use_pallas: bool = True,
+        cache=None,
     ):
         assert mode in ("off", "xla", "stitch")
         self.hw = hw
@@ -209,6 +213,10 @@ class StitchCompiler:
         self.cost = CostModel(hw)
         self.tuner = TemplateTuner(hw, execution_based=execution_based_eval)
         self.use_pallas = use_pallas
+        # Optional repro.cache.StitchCache (duck-typed: lookup/insert) — when
+        # set, stitch-mode compiles replay cached plans and populate the
+        # cache on miss; pattern generation/ILP/tuning run only cold.
+        self.cache = cache
 
     # -- planning -------------------------------------------------------------
     def plan(self, g: Graph) -> tuple[list[FusionPattern], PlanResult | None]:
@@ -238,8 +246,18 @@ class StitchCompiler:
                 total += self.cost.fused_time(p) + self.hw.launch_latency
         return total
 
-    def compile(self, g: Graph) -> CompiledGraph:
+    def compile(self, g: Graph, *, bypass_cache_lookup: bool = False) -> CompiledGraph:
+        t0 = _time.perf_counter()
         g.validate()
+        cached = self.cache is not None and self.mode == "stitch"
+        sig = None
+        if cached:
+            sig = self.cache.signature_of(g)   # computed once, reused by insert
+            if not bypass_cache_lookup:
+                hit = self.cache.lookup(g, self, sig=sig)
+                if hit is not None:
+                    hit.stats.compile_seconds = _time.perf_counter() - t0
+                    return hit
         chosen, ilp = self.plan(g)
         covered: set[str] = set()
         for p in chosen:
@@ -276,4 +294,12 @@ class StitchCompiler:
 
         stats.n_kernels = len(groups)
         stats.modeled_time = self.modeled_time(g, [grp.members for grp in groups])
-        return CompiledGraph(g, groups, stats)
+        stats.compile_seconds = _time.perf_counter() - t0
+        compiled = CompiledGraph(g, groups, stats)
+        if cached:
+            stats.cache_status = "miss"
+            self.cache.insert(
+                g, compiled, sig=sig, solve_seconds=stats.compile_seconds,
+                compiler=self,
+            )
+        return compiled

@@ -153,6 +153,7 @@ class Graph:
         self.nodes: dict[str, OpNode] = {}
         self.outputs: list[str] = []
         self._users: dict[str, set[str]] | None = None  # lazy cache
+        self._topo: list[str] | None = None             # lazy cache
 
     # -- construction -------------------------------------------------------
     def add(self, node: OpNode) -> OpNode:
@@ -163,6 +164,7 @@ class Graph:
                 raise ValueError(f"{node.name}: unknown operand {o!r}")
         self.nodes[node.name] = node
         self._users = None
+        self._topo = None
         return node
 
     def mark_output(self, *names: str) -> None:
@@ -205,7 +207,12 @@ class Graph:
         ]
 
     def topo_order(self) -> list[str]:
-        """Deterministic Kahn topological order (insertion-order tiebreak)."""
+        """Deterministic Kahn topological order (insertion-order tiebreak).
+
+        Cached until the next :meth:`add`; a fresh copy is returned so
+        callers may mutate their list freely."""
+        if self._topo is not None:
+            return list(self._topo)
         # count operand edges (duplicates count once per unique producer)
         indeg = {n: len(set(self.nodes[n].operands)) for n in self.nodes}
         order: list[str] = []
@@ -222,7 +229,8 @@ class Graph:
                     seen_ready.add(u)
         if len(order) != len(self.nodes):
             raise ValueError(f"cycle detected in graph {self.name!r}")
-        return order
+        self._topo = order
+        return list(order)
 
     def validate(self) -> None:
         self.topo_order()  # raises on cycles / dangling operands

@@ -54,6 +54,29 @@ def _dtype_str(aval) -> str:
     return str(np.dtype(aval.dtype))
 
 
+def _stable_params_sig(params: dict) -> str:
+    """Deterministic, value-level spelling of a primitive's static params.
+
+    CUSTOM nodes execute through a closure (``eval_fn``), which no hash can
+    see; this canonicalization hook preserves the *identity* of the opaque
+    op (dimension numbers, window shapes, ...) so graph signatures
+    (:mod:`repro.cache.signature`) distinguish configurations while staying
+    invariant to node naming and trace order.  Arrays and sub-jaxprs are
+    spelled by dtype/rank only — their content is runtime detail.
+    """
+    def spell(v) -> str:
+        if isinstance(v, (bool, int, float, str, type(None))):
+            return repr(v)
+        if isinstance(v, (tuple, list)):
+            return "(" + ",".join(spell(x) for x in v) + ")"
+        if isinstance(v, np.ndarray):
+            return f"array:{v.dtype}:rank{v.ndim}"
+        if isinstance(v, np.dtype) or isinstance(v, type):
+            return str(v)
+        return type(v).__name__
+    return ";".join(f"{k}={spell(params[k])}" for k in sorted(params))
+
+
 def trace_to_graph(fn: Callable, *example_args, name: str = "traced") -> tuple[Graph, list[str]]:
     """Returns (graph, input_names) where input_names[i] is the PARAMETER
     node for positional argument i (flattened pytree order)."""
@@ -199,17 +222,19 @@ def trace_to_graph(fn: Callable, *example_args, name: str = "traced") -> tuple[G
             res = _prim.bind(*vals, **_params)
             return res
 
+        psig = _stable_params_sig(params)
         if len(eqn.outvars) == 1:
             out = eqn.outvars[0]
             nm = fresh(f"custom_{prim.name}")
             g.add(OpNode(nm, OpKind.CUSTOM, tuple(out.aval.shape),
                          _dtype_str(out.aval), operands,
-                         {"prim": prim.name, "eval_fn": run}))
+                         {"prim": prim.name, "params_sig": psig, "eval_fn": run}))
             env[out] = nm
         else:
             base = fresh(f"custom_{prim.name}")
             g.add(OpNode(base, OpKind.CUSTOM, (), "float32", operands,
-                         {"prim": prim.name, "eval_fn": run, "multi": True}))
+                         {"prim": prim.name, "params_sig": psig,
+                          "eval_fn": run, "multi": True}))
             for i, out in enumerate(eqn.outvars):
                 nm = f"{base}.o{i}"
                 g.add(OpNode(nm, OpKind.CUSTOM, tuple(out.aval.shape),

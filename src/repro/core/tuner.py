@@ -22,7 +22,18 @@ from .pattern import FusionPattern
 from .scratch import ScratchAllocator, ScratchPlan
 from .templates import Attr, Schedule, SubAttr, Template
 
-__all__ = ["TunedKernel", "TemplateTuner", "generate_templates"]
+__all__ = ["TunedKernel", "TemplateTuner", "generate_templates", "grid_row_block"]
+
+
+def grid_row_block(template: Template) -> int | None:
+    """The GRID tiling factor a template was tuned with (None if unfactored)."""
+    rb = None
+    for s in template:
+        for a in s.attrs:
+            for lvl in a.levels:
+                if lvl.kind == "GRID" and lvl.factor:
+                    rb = lvl.factor
+    return rb
 
 
 @dataclass
@@ -106,12 +117,28 @@ class TemplateTuner:
         self.hw = hw
         self.cost = CostModel(hw)
         self.execution_based = execution_based
+        # ScratchAllocator builds a whole-graph post-dominator tree; reuse it
+        # across the many (pattern, template) pairs of one graph's tuning run.
+        # Keyed by graph identity, invalidated when the graph grows OR its
+        # outputs change (mark_output moves the virtual post-dominance sink).
+        self._allocators: dict[int, tuple[ScratchAllocator, int, tuple]] = {}
+
+    def _allocator(self, g) -> ScratchAllocator:
+        hit = self._allocators.get(id(g))
+        if (hit is not None and hit[0].g is g and hit[1] == len(g.nodes)
+                and hit[2] == tuple(g.outputs)):
+            return hit[0]
+        if len(self._allocators) > 8:
+            self._allocators.clear()
+        alloc = ScratchAllocator(g)
+        self._allocators[id(g)] = (alloc, len(g.nodes), tuple(g.outputs))
+        return alloc
 
     # -- SharedPlanning -------------------------------------------------------
     def shared_planning(self, p: FusionPattern, template: Template) -> ScratchPlan | None:
         req_all = self.cost.scratch_request(p)
         req = {k: v for k, v in req_all.items() if k in set(template.scratch_ops)}
-        plan = ScratchAllocator(p.graph).allocate(req)
+        plan = self._allocator(p.graph).allocate(req)
         if plan.allocated > self.hw.onchip_budget:    # volume constraint
             return None
         return plan
@@ -138,12 +165,7 @@ class TemplateTuner:
             plan = self.shared_planning(p, template)
             if plan is None:
                 continue  # infeasible template (paper: skip)
-            rb = None
-            for s in template:
-                for a in s.attrs:
-                    for lvl in a.levels:
-                        if lvl.kind == "GRID" and lvl.factor:
-                            rb = lvl.factor
+            rb = grid_row_block(template)
             try:
                 fn = build_stitched_callable(
                     p, row_block=rb, scratch_ops=template.scratch_ops
@@ -170,3 +192,51 @@ class TemplateTuner:
             if best is None or key < best_key:
                 best = cand
         return best
+
+    # -- plan replay (cache hits) --------------------------------------------
+    def instantiate(
+        self,
+        p: FusionPattern,
+        row_block: int | None = None,
+        scratch_names=(),
+    ) -> TunedKernel | None:
+        """Build ONE kernel from a previously tuned ``(row_block, scratch)``
+        choice, skipping template enumeration and candidate evaluation.
+
+        This is the warm path of :mod:`repro.cache`: the stored choice is
+        re-validated against this pattern's concrete shapes (row blocks are
+        clamped to the feasible set; scratch must fit the on-chip budget),
+        so a plan recorded at a nearby bucketed shape still instantiates
+        soundly or falls back to fused-jnp (return None).
+        """
+        from repro.kernels.stitched import (
+            StitchInfeasible, analyze_pattern, build_stitched_callable)
+
+        try:
+            ana = analyze_pattern(p)
+        except StitchInfeasible:
+            return None
+        rb = row_block or ana.feasible_blocks[0]
+        if rb not in ana.feasible_blocks:
+            rb = max((b for b in ana.feasible_blocks if b <= rb),
+                     default=ana.feasible_blocks[0])
+        member_names = {n.name for n in p.compute_members}
+        scratch = {n for n in scratch_names if n in member_names}
+        template = Template(tuple(
+            Schedule(
+                node.name,
+                _attrs_for_node(node, rb, seq_small_reduce=False),
+                scratch=node.name in scratch,
+            )
+            for node in p.compute_members
+        ))
+        plan = self.shared_planning(p, template)
+        if plan is None:
+            return None
+        try:
+            fn = build_stitched_callable(
+                p, row_block=rb, scratch_ops=template.scratch_ops)
+        except StitchInfeasible:
+            return None
+        return TunedKernel(p, template, plan, self.cost.fused_time(p), None,
+                           "pallas", fn)

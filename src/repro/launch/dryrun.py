@@ -1,11 +1,8 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
-The two lines above MUST run before any jax import (jax locks the device
-count on first init); 512 placeholder CPU devices back the production
-meshes.  For each cell we:
+The XLA_FLAGS setup below MUST run before any jax import (jax locks the
+device count on first init); 512 placeholder CPU devices back the
+production meshes.  For each cell we:
 
     with mesh:
         lowered  = jax.jit(step, in_shardings=..., donate...).lower(*specs)
@@ -19,6 +16,15 @@ Usage:
     python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
     python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
 """
+
+import os
+
+# respect an operator-provided device count; keep unrelated flags intact
+_flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=512").strip()
+
 
 import argparse
 import json

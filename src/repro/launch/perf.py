@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Perf hillclimb driver (EXPERIMENTS.md §Perf).
 
 Lowers one (arch x shape x mesh) cell with optimization-variant overrides
@@ -19,6 +16,15 @@ Variants (--set key=value, repeatable):
     param_dtype=bfloat16  parameter storage dtype
     capacity=F            MoE capacity factor
 """
+
+import os
+
+# must be set before jax import; respect an operator-provided device count
+# but keep any unrelated pre-existing flags (e.g. --xla_dump_to) intact
+_flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=512").strip()
 
 import argparse
 import dataclasses

@@ -3,6 +3,18 @@
 Single-host reference implementation of the serving loop the decode cells
 lower: requests are padded into a fixed batch, prefilled once, then decoded
 token-by-token with the jitted ``decode_step``.
+
+Fusion-stitching integration (miss-then-upgrade): when constructed with a
+:class:`repro.cache.CompilationService`, the engine traces the decode step
+to StitchIR on first use and asks the service for an executable.  A cache
+hit replays the stored fusion plan instantly; a miss returns the cheap
+XLA-mode fallback *immediately* while the full stitch pipeline (pattern
+generation, ILP, tuning) runs on a background thread and populates the
+cache — the engine upgrades to the stitched plan on a later ``generate``
+call, so no request ever waits on the tuner.  Decoding executes through the
+stitched artifact only when ``ServeConfig.stitch_execute`` is set (the
+interpret-mode reference path); otherwise the jitted step keeps serving and
+the stitched plan powers kernel-count/step-time reporting and cache warmth.
 """
 
 from __future__ import annotations
@@ -17,21 +29,108 @@ import numpy as np
 from repro.models.api import Model
 
 
+def _avals(tree) -> tuple:
+    """(shape, dtype) per leaf — Python scalars get a scalar stand-in."""
+    return tuple(
+        (getattr(x, "shape", ()), str(getattr(x, "dtype", type(x).__name__)))
+        for x in jax.tree_util.tree_leaves(tree))
+
+
 @dataclass
 class ServeConfig:
     batch: int
     max_len: int
     max_new_tokens: int = 32
     eos_id: int = -1     # -1: never stop early (fixed-length benchmark mode)
+    stitch_execute: bool = False   # run decode through the stitched artifact
 
 
 class Engine:
-    def __init__(self, model: Model, params, cfg: ServeConfig):
+    def __init__(self, model: Model, params, cfg: ServeConfig,
+                 stitch_service=None):
         self.model = model
         self.params = params
         self.cfg = cfg
         self._decode = jax.jit(model.decode_step)
+        self.stitch_service = stitch_service
+        self.stitch_status: str | None = None   # None|hit|miss|pending|error
+        self._stitch: dict | None = None
 
+    # -- fusion-stitching plumbing -------------------------------------------
+    def _prepare_stitch(self, cache, tok, extra) -> None:
+        from repro.cache.signature import compute_signature
+        from repro.core.trace import trace_to_graph
+
+        # extra is traced as a real input (not baked into the closure) so
+        # later calls' values — e.g. per-request encoder outputs — flow
+        # through the stitched graph; only a *structure* change forces the
+        # jitted fallback (checked per call in generate()).
+        def step(params, cache, tok, extra):
+            return self.model.decode_step(params, cache, tok, **extra)
+
+        try:
+            g, names = trace_to_graph(step, self.params, cache, tok, extra,
+                                      name="decode_step")
+            compiled, status = self.stitch_service.compile_or_fallback(g)
+            out_tree = jax.tree_util.tree_structure(
+                jax.eval_shape(step, self.params, cache, tok, extra))
+        except Exception:
+            self.stitch_status = "error"
+            self._stitch = {}
+            return
+        executable = out_tree.num_leaves == len(g.outputs)
+        self._stitch = {"graph": g, "names": names, "out_tree": out_tree,
+                        "compiled": compiled, "executable": executable,
+                        "in_tree": jax.tree_util.tree_structure(
+                            (self.params, cache, tok, extra)),
+                        "in_avals": _avals((self.params, cache, tok, extra)),
+                        "sig": compute_signature(g),
+                        "compiler": self.stitch_service.compiler("stitch")}
+        self.stitch_status = status
+
+    def _refresh_stitch(self) -> None:
+        """Upgrade the fallback executable once the background compile of the
+        stitched plan has landed in the cache.  The signature and compiler
+        are memoized from trace time, so a still-pending poll costs a dict
+        probe, not a graph hash."""
+        if not self._stitch:
+            return
+        svc = self.stitch_service
+        hit = svc.cache.lookup(self._stitch["graph"], self._stitch["compiler"],
+                               sig=self._stitch["sig"], count=False)
+        if hit is not None:
+            self._stitch["compiled"] = hit
+            self.stitch_status = "hit"
+        else:
+            # re-kick if our background compile was deferred (worker cap) or
+            # died — otherwise this engine would serve the fallback forever
+            svc.ensure_compiling(self._stitch["graph"], sig=self._stitch["sig"])
+
+    def _stitch_decode(self, cache, tok, extra):
+        st = self._stitch
+        leaves = jax.tree_util.tree_leaves((self.params, cache, tok, extra))
+        env = dict(zip(st["names"], leaves))
+        outs = st["compiled"](env)
+        flat = [outs[o] for o in st["graph"].outputs]
+        return jax.tree_util.tree_unflatten(st["out_tree"], flat)
+
+    def stitch_report(self) -> dict:
+        """Observability: upgrade status, plan stats, cache hit rates."""
+        out: dict[str, Any] = {"status": self.stitch_status}
+        if self._stitch and self._stitch.get("compiled") is not None:
+            s = self._stitch["compiled"].stats
+            out["plan"] = {
+                "mode": s.mode, "n_kernels": s.n_kernels, "n_ops": s.n_ops,
+                "pallas_groups": s.pallas_groups,
+                "modeled_time": s.modeled_time,
+                "cache_status": s.cache_status,
+            }
+        if self.stitch_service is not None:
+            out["cache"] = self.stitch_service.cache.report()
+            out["service_error"] = self.stitch_service.last_error
+        return out
+
+    # -- serving loop ---------------------------------------------------------
     def generate(self, prompts: np.ndarray, **extra) -> np.ndarray:
         """prompts: (batch, prompt_len) int32 -> (batch, max_new_tokens)."""
         B, P = prompts.shape
@@ -45,10 +144,31 @@ class Engine:
             cache["k"] = jnp.pad(cache["k"], [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
             cache["v"] = jnp.pad(cache["v"], [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
 
-        out = []
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        if self.stitch_service is not None:
+            if self._stitch is None:
+                self._prepare_stitch(cache, tok, extra)
+            elif self.stitch_status in ("miss", "pending"):
+                self._refresh_stitch()
+        # the stitched executable is shape-specialized at trace time; any
+        # structure OR leaf-shape drift (e.g. per-request encoder outputs of
+        # a new length) falls back to the jitted step for this call
+        inputs = (self.params, cache, tok, extra)
+        use_stitched = (
+            self.cfg.stitch_execute
+            and self._stitch
+            and self._stitch.get("executable")
+            and self._stitch.get("compiled") is not None
+            and jax.tree_util.tree_structure(inputs) == self._stitch["in_tree"]
+            and _avals(inputs) == self._stitch["in_avals"]
+        )
+
+        out = []
         for _ in range(self.cfg.max_new_tokens):
             out.append(np.asarray(tok))
-            logits, cache = self._decode(self.params, cache, tok, **extra)
+            if use_stitched:
+                logits, cache = self._stitch_decode(cache, tok, extra)
+            else:
+                logits, cache = self._decode(self.params, cache, tok, **extra)
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         return np.concatenate(out, axis=1)
