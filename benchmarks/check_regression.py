@@ -1,0 +1,101 @@
+"""Perf-regression gate: compare a fresh BENCH record against the committed
+baseline.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --baseline benchmarks/baseline.json --candidate bench.json
+
+Gated metrics (deterministic modeled quantities only — wall-clock numbers
+in the record are informational and too noisy to gate):
+
+* per-workload **stitched kernel count** — more kernels than baseline means
+  fusion got worse (the paper's kernel-compression win eroding);
+* per-workload **modeled stitch step time** — the cost model's end-to-end
+  estimate regressing means a slower plan shipped.
+
+A candidate fails when either metric exceeds baseline by more than
+``--tolerance`` (default 10%).  Workloads present only in the candidate are
+reported as new (not gated); workloads missing from the candidate fail the
+gate — losing coverage silently is itself a regression.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+TOLERANCE = 0.10
+
+# (json path inside workloads[name], label, gate?) — lower is better for all
+METRICS = (
+    (("kernels", "stitch"), "stitched_kernels"),
+    (("modeled_time_s", "stitch"), "modeled_stitch_time_s"),
+)
+
+
+def _get(d: dict, path) -> float | None:
+    for k in path:
+        if not isinstance(d, dict) or k not in d:
+            return None
+        d = d[k]
+    return d
+
+
+def compare(baseline: dict, candidate: dict, tolerance: float = TOLERANCE):
+    """Returns (failures, lines): failure strings (empty = pass) and the
+    full per-metric report."""
+    failures, lines = [], []
+    base_wl = baseline.get("workloads", {})
+    cand_wl = candidate.get("workloads", {})
+    for name in sorted(base_wl):
+        if name not in cand_wl:
+            failures.append(f"{name}: missing from candidate record")
+            continue
+        for path, label in METRICS:
+            b = _get(base_wl[name], path)
+            c = _get(cand_wl[name], path)
+            if b is None or c is None:
+                failures.append(f"{name}.{label}: metric missing "
+                                f"(baseline={b}, candidate={c})")
+                continue
+            ratio = c / b if b else float("inf") if c else 1.0
+            verdict = "OK"
+            if ratio > 1.0 + tolerance:
+                verdict = "REGRESSION"
+                failures.append(
+                    f"{name}.{label}: {b:g} -> {c:g} "
+                    f"(+{100 * (ratio - 1):.1f}% > {100 * tolerance:.0f}%)")
+            lines.append(f"{name},{label},{b:g},{c:g},{ratio:.3f},{verdict}")
+    for name in sorted(set(cand_wl) - set(base_wl)):
+        lines.append(f"{name},-,-,-,-,NEW (not gated)")
+    return failures, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="benchmarks/baseline.json")
+    ap.add_argument("--candidate", required=True)
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE)
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.candidate) as f:
+        candidate = json.load(f)
+
+    failures, lines = compare(baseline, candidate, args.tolerance)
+    print("workload,metric,baseline,candidate,ratio,verdict")
+    for line in lines:
+        print(line)
+    if failures:
+        print(f"\nFAIL — {len(failures)} perf regression(s) "
+              f"beyond {100 * args.tolerance:.0f}%:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        return 1
+    print(f"\nPASS — no metric regressed beyond {100 * args.tolerance:.0f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

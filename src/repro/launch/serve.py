@@ -1,12 +1,29 @@
-"""Serving driver: prefill a batch of synthetic prompts, decode N tokens.
+"""Serving driver: static batch or continuous batching under open-loop load.
+
+Continuous mode (default for attention families) drives the slot scheduler
+with a Poisson arrival process — requests arrive on their own clock whether
+or not the server keeps up (open loop), prompt lengths and token budgets are
+ragged, and the report shows throughput plus latency percentiles:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
-        --batch 4 --prompt-len 32 --new-tokens 16
+        --slots 4 --requests 32 --rate 20 --prompt-len 24 --new-tokens 16
+
+Static mode replays the legacy fixed-batch lock-step loop:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
+        --mode static --slots 4 --prompt-len 32 --new-tokens 16
+
+``--stitch`` builds a :class:`repro.cache.CompilationService` (persistent
+when ``--cache-dir`` is given), serves through the stitched decode artifact
+(miss-then-upgrade: the XLA fallback answers instantly while the stitch
+pipeline compiles in the background), and prints ``Engine.stitch_report()``
+at exit.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -15,53 +32,156 @@ import numpy as np
 from repro.configs import get_config, get_reduced
 from repro.models import build_model
 from repro.serve import Engine, ServeConfig
+from repro.serve.scheduler import RAGGED_FAMILIES
+
+
+def build_engine(args, cfg, model, params):
+    svc = None
+    if args.stitch:
+        from repro.cache import CompilationService, StitchCache
+        svc = CompilationService(StitchCache(directory=args.cache_dir))
+    eng = Engine(model, params, ServeConfig(
+        batch=args.slots, max_len=args.max_len,
+        max_new_tokens=args.new_tokens, eos_id=args.eos,
+        stitch_execute=args.stitch), stitch_service=svc)
+    return eng
+
+
+def make_workload(args, cfg):
+    """Ragged prompts + Poisson arrival offsets (open loop)."""
+    rng = np.random.default_rng(args.seed)
+    lo = max(1, args.prompt_len // 2)
+    hi = max(lo + 1, args.prompt_len)
+    lens = rng.integers(lo, hi + 1, args.requests)
+    news = rng.integers(max(1, args.new_tokens // 4), args.new_tokens + 1,
+                        args.requests)
+    prompts = [rng.integers(0, cfg.vocab, (p,)).astype(np.int32) for p in lens]
+    if args.rate > 0:
+        arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
+    else:
+        arrivals = np.zeros(args.requests)
+    return prompts, news, arrivals
+
+
+def run_continuous(args, eng, prompts, news, arrivals):
+    t0 = time.monotonic()
+    pending = list(zip(prompts, news, arrivals))
+    i = 0
+    while i < len(pending) or eng.scheduler.queue or eng.scheduler.n_active:
+        now = time.monotonic() - t0
+        while i < len(pending) and pending[i][2] <= now:
+            p, n, at = pending[i]
+            eng.submit(p, max_new_tokens=int(n), arrival_time=t0 + at)
+            i += 1
+        if eng.scheduler.queue or eng.scheduler.n_active:
+            eng.step()
+        elif i < len(pending):
+            time.sleep(max(0.0, pending[i][2] - (time.monotonic() - t0)))
+    report = eng.serve_report()
+    # tokens_per_sec above is busy-time capacity (decode seconds only);
+    # wall-clock includes idle gaps between Poisson arrivals and is the
+    # number comparable to static mode's report
+    wall = time.monotonic() - t0
+    report["wall_elapsed_s"] = wall
+    report["wall_tokens_per_sec"] = report["total_tokens"] / max(wall, 1e-9)
+    return report
+
+
+def run_static(args, eng, prompts, news):
+    """Legacy lock-step: pad every group of ``slots`` requests into one
+    rectangle, decode to the group's worst-case budget."""
+    total_tokens = 0
+    t0 = time.monotonic()
+    for g in range(0, len(prompts), args.slots):
+        group = prompts[g:g + args.slots]
+        while len(group) < args.slots:           # ride-along padding rows
+            group = group + [group[-1]]
+        lens = [len(p) for p in group]
+        rect = np.zeros((args.slots, max(lens)), np.int32)
+        for r, p in enumerate(group):
+            rect[r, :len(p)] = p
+        eng.cfg.max_new_tokens = int(max(news[g:g + args.slots]))
+        toks = eng.generate(rect, prompt_lens=lens)
+        total_tokens += int(sum(min(n, toks.shape[1])
+                                for n in news[g:g + args.slots]))
+    dt = time.monotonic() - t0
+    return {"requests_finished": len(prompts), "total_tokens": total_tokens,
+            "elapsed_s": dt, "tokens_per_sec": total_tokens / max(dt, 1e-9)}
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--mode", choices=["continuous", "static"], default=None,
+                    help="default: continuous for attention families")
+    ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=None,
+                    help="KV capacity (default prompt-len + new-tokens)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="continuous mode: number of open-loop requests")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate req/s (0 = all at t=0)")
+    ap.add_argument("--eos", type=int, default=-1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stitch", action="store_true",
+                    help="serve decode through the stitched artifact "
+                         "(miss-then-upgrade)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent StitchCache directory (with --stitch)")
     args = ap.parse_args()
+    if args.max_len is None:
+        args.max_len = args.prompt_len + args.new_tokens
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = Engine(model, params, ServeConfig(
-        batch=args.batch, max_len=args.prompt_len + args.new_tokens,
-        max_new_tokens=args.new_tokens))
+    if args.mode is None:
+        args.mode = "continuous" if cfg.family in RAGGED_FAMILIES else "static"
 
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)
-    extra = {}
     if cfg.family == "audio":
-        extra["frames"] = np.asarray(
-            rng.standard_normal((args.batch, args.prompt_len, cfg.d_model)),
-            dtype=np.float32)
-        extra_decode = {"enc_out": None}
-    t0 = time.time()
-    if cfg.family == "audio":
-        # encoder output doubles as the decode-time cross-attn input
-        import jax.numpy as jnp
-        from repro.models import encdec
-        enc_out = encdec.encode(params, jnp.asarray(extra["frames"]), cfg)
-        logits, _ = model.prefill(params, jnp.asarray(prompts), frames=jnp.asarray(extra["frames"]))
-        cache = model.init_cache(args.batch, args.prompt_len + args.new_tokens)
-        out_toks = []
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        dec = jax.jit(lambda p, c, t, e: model.decode_step(p, c, t, enc_out=e))
-        for _ in range(args.new_tokens):
-            out_toks.append(np.asarray(tok))
-            logits, cache = dec(params, cache, tok, enc_out)
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        toks = np.concatenate(out_toks, axis=1)
+        _serve_audio(args, cfg, model, params)
+        return
+
+    eng = build_engine(args, cfg, model, params)
+    prompts, news, arrivals = make_workload(args, cfg)
+    if args.mode == "continuous":
+        report = run_continuous(args, eng, prompts, news, arrivals)
     else:
-        toks = eng.generate(prompts)
+        report = run_static(args, eng, prompts, news)
+    print(f"arch={cfg.name} mode={args.mode} slots={args.slots}")
+    print(json.dumps(report, indent=2, default=float))
+    if args.stitch:
+        print("stitch_report:")
+        print(json.dumps(eng.stitch_report(), indent=2, default=str))
+
+
+def _serve_audio(args, cfg, model, params):
+    """Enc-dec (audio) family: cross-attn decode outside the engine."""
+    import jax.numpy as jnp
+    from repro.models import encdec
+    rng = np.random.default_rng(args.seed)
+    B, P = args.slots, args.prompt_len
+    prompts = rng.integers(0, cfg.vocab, (B, P)).astype(np.int32)
+    frames = np.asarray(rng.standard_normal((B, P, cfg.d_model)), np.float32)
+    t0 = time.time()
+    enc_out = encdec.encode(params, jnp.asarray(frames), cfg)
+    logits, _ = model.prefill(params, jnp.asarray(prompts),
+                              frames=jnp.asarray(frames))
+    cache = model.init_cache(B, P + args.new_tokens)
+    out_toks = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    dec = jax.jit(lambda p, c, t, e: model.decode_step(p, c, t, enc_out=e))
+    for _ in range(args.new_tokens):
+        out_toks.append(np.asarray(tok))
+        logits, cache = dec(params, cache, tok, enc_out)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    toks = np.concatenate(out_toks, axis=1)
     dt = time.time() - t0
     print(f"arch={cfg.name}: generated {toks.shape} in {dt:.2f}s "
-          f"({args.batch * args.new_tokens / dt:.1f} tok/s)")
+          f"({B * args.new_tokens / dt:.1f} tok/s)")
     print(toks[:, :12])
 
 

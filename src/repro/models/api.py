@@ -117,8 +117,10 @@ def build_model(cfg: ModelConfig) -> Model:
         cfg=cfg,
         init=lambda key: lm.init_params(cfg, key),
         train_forward=lambda p, batch: lm.train_forward(p, batch, cfg),
-        prefill=lambda p, tokens, patch_embeds=None, **kw: lm.prefill(
-            p, tokens, cfg, patch_embeds=patch_embeds),
+        prefill=lambda p, tokens, patch_embeds=None, max_len=None,
+            true_len=None, **kw: lm.prefill(
+            p, tokens, cfg, max_len=max_len, patch_embeds=patch_embeds,
+            true_len=true_len),
         decode_step=lambda p, cache, tokens, **kw: lm.decode_step(
             p, cache, tokens, cfg),
         init_cache=lambda b, s: lm.init_cache(cfg, b, s),

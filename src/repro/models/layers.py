@@ -217,12 +217,22 @@ def apply_attention(
     scale = 1.0 / math.sqrt(dh)
     new_cache = {"k": k, "v": v} if return_kv else None
     if cache is not None:
-        # static-shape serving: cache (B, Smax, Hkv, dh); `length` tokens valid
+        # static-shape serving: cache (B, Smax, Hkv, dh); `length` tokens valid.
+        # A scalar `length` is the lock-step batch (every row at the same
+        # position); a (B,) vector is the continuous-batching ragged batch —
+        # each slot writes its new KV at its own offset (vmapped
+        # dynamic_update_slice lowers to one batched scatter).
         length = cache["length"]
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                          (0, length, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                          (0, length, 0, 0))
+        if jnp.ndim(length):
+            row_upd = lambda c, u, l: jax.lax.dynamic_update_slice(
+                c, u, (l, 0, 0))
+            ck = jax.vmap(row_upd)(cache["k"], k.astype(cache["k"].dtype), length)
+            cv = jax.vmap(row_upd)(cache["v"], v.astype(cache["v"].dtype), length)
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                              (0, length, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                              (0, length, 0, 0))
         new_cache = {"k": ck, "v": cv, "length": length + S}
         Smax = ck.shape[1]
         group = Hq // Hkv

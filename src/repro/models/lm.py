@@ -195,9 +195,16 @@ def train_forward(params: Params, batch: dict, cfg: ModelConfig,
 # ---------------------------------------------------------------------------
 
 def prefill(params: Params, tokens, cfg: ModelConfig, max_len: int | None = None,
-            patch_embeds=None):
+            patch_embeds=None, true_len=None):
     """Full-sequence causal forward that also fills a KV cache.
-    Returns (last-position logits, cache)."""
+    Returns (last-position logits, cache).
+
+    ``true_len`` (B,) enables bucketed ragged prefill: ``tokens`` may be
+    right-padded to a shape bucket, logits are gathered at each row's true
+    last position, and ``cache["length"]`` comes back as a per-row vector.
+    Causal masking makes the pad positions inert for every real position,
+    so a bucketed prefill is numerically identical to an exact-length one
+    at the real positions."""
     B, S = tokens.shape
     max_len = max_len or S
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
@@ -222,11 +229,18 @@ def prefill(params: Params, tokens, cfg: ModelConfig, max_len: int | None = None
     h, (ks, vs) = scan_or_unroll(body, h, params["layers"], cfg.n_layers,
                                  cfg.scan_layers)
     h = apply_norm(params["final_norm"], h, cfg)
-    logits = (h[:, -1] @ _head_matrix(params, cfg)).astype(jnp.float32)
+    if true_len is None:
+        last = h[:, -1]
+        length = jnp.asarray(S, jnp.int32)
+    else:
+        tl = jnp.asarray(true_len, jnp.int32)           # (B,)
+        last = jnp.take_along_axis(h, (tl - 1)[:, None, None], axis=1)[:, 0]
+        length = tl
+    logits = (last @ _head_matrix(params, cfg)).astype(jnp.float32)
     if max_len > S:
         pad = [(0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0)]
         ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
-    cache = {"k": ks, "v": vs, "length": jnp.asarray(S, jnp.int32)}
+    cache = {"k": ks, "v": vs, "length": length}
     return logits, cache
 
 
@@ -262,7 +276,8 @@ def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig,
     Returns (logits_last, new_cache)."""
     B, S = tokens.shape
     length = cache["length"]
-    positions = length + jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    base = length[:, None] if jnp.ndim(length) else length   # ragged: (B,) offsets
+    positions = base + jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     h = embed_tokens(params, tokens, cfg, patch_embeds)
 
     def body(carry, xs):

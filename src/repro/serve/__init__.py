@@ -1,1 +1,11 @@
 from .engine import Engine, ServeConfig
+from .metrics import ServeMetrics, StepMetrics, percentiles
+from .queue import FinishedRequest, Request, RequestQueue
+from .scheduler import RAGGED_FAMILIES, Scheduler, SchedulerConfig
+
+__all__ = [
+    "Engine", "ServeConfig",
+    "Scheduler", "SchedulerConfig", "RAGGED_FAMILIES",
+    "Request", "FinishedRequest", "RequestQueue",
+    "ServeMetrics", "StepMetrics", "percentiles",
+]

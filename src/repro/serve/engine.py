@@ -1,8 +1,18 @@
 """Batched serving engine: prefill + greedy decode over a KV cache.
 
-Single-host reference implementation of the serving loop the decode cells
-lower: requests are padded into a fixed batch, prefilled once, then decoded
-token-by-token with the jitted ``decode_step``.
+Two serving modes share this engine:
+
+* **Static batch** (:meth:`Engine.generate`) — requests are padded into one
+  fixed batch, prefilled once, then decoded lock-step.  With
+  ``prompt_lens`` the batch may be ragged: prompts are padded to a pow2
+  bucket, logits gathered at each row's true last position, and the decode
+  runs with a per-row length vector.
+* **Continuous batching** (:meth:`Engine.submit` / :meth:`Engine.step` /
+  :meth:`Engine.drain`) — a slot-based
+  :class:`~repro.serve.scheduler.Scheduler` admits queued requests into a
+  fixed-slot decode batch, interleaves bucketed prefills with ongoing
+  decode, evicts slots on EOS / max-token completion and refills them
+  immediately, so one long request never stalls the batch.
 
 Fusion-stitching integration (miss-then-upgrade): when constructed with a
 :class:`repro.cache.CompilationService`, the engine traces the decode step
@@ -38,7 +48,7 @@ def _avals(tree) -> tuple:
 
 @dataclass
 class ServeConfig:
-    batch: int
+    batch: int           # static batch size == continuous-batching slot count
     max_len: int
     max_new_tokens: int = 32
     eos_id: int = -1     # -1: never stop early (fixed-length benchmark mode)
@@ -55,6 +65,11 @@ class Engine:
         self.stitch_service = stitch_service
         self.stitch_status: str | None = None   # None|hit|miss|pending|error
         self._stitch: dict | None = None
+        self._scheduler = None
+        self._ragged_prefill = jax.jit(
+            lambda p, toks, tl, ml, **kw: model.prefill(
+                p, toks, true_len=tl, max_len=ml, **kw),
+            static_argnames=("ml",))
 
     # -- fusion-stitching plumbing -------------------------------------------
     def _prepare_stitch(self, cache, tok, extra) -> None:
@@ -79,11 +94,13 @@ class Engine:
             self._stitch = {}
             return
         executable = out_tree.num_leaves == len(g.outputs)
+        # eligibility keys cover only (cache, tok, extra): params are fixed
+        # for an engine's lifetime, so the per-step check stays cheap
         self._stitch = {"graph": g, "names": names, "out_tree": out_tree,
                         "compiled": compiled, "executable": executable,
                         "in_tree": jax.tree_util.tree_structure(
-                            (self.params, cache, tok, extra)),
-                        "in_avals": _avals((self.params, cache, tok, extra)),
+                            (cache, tok, extra)),
+                        "in_avals": _avals((cache, tok, extra)),
                         "sig": compute_signature(g),
                         "compiler": self.stitch_service.compiler("stitch")}
         self.stitch_status = status
@@ -130,11 +147,88 @@ class Engine:
             out["service_error"] = self.stitch_service.last_error
         return out
 
-    # -- serving loop ---------------------------------------------------------
-    def generate(self, prompts: np.ndarray, **extra) -> np.ndarray:
-        """prompts: (batch, prompt_len) int32 -> (batch, max_new_tokens)."""
+    def _poll_stitch(self, cache, tok, extra) -> None:
+        """Trace-on-first-use, then poll the background upgrade while the
+        fallback is still serving."""
+        if self.stitch_service is None:
+            return
+        if self._stitch is None:
+            self._prepare_stitch(cache, tok, extra)
+        elif self.stitch_status in ("miss", "pending"):
+            self._refresh_stitch()
+
+    def _use_stitched(self, cache, tok, extra) -> bool:
+        # the stitched executable is shape-specialized at trace time; any
+        # structure OR leaf-shape drift (e.g. per-request encoder outputs of
+        # a new length) falls back to the jitted step for this call
+        if not (self.cfg.stitch_execute
+                and self._stitch
+                and self._stitch.get("executable")
+                and self._stitch.get("compiled") is not None):
+            return False
+        inputs = (cache, tok, extra)
+        return (jax.tree_util.tree_structure(inputs) == self._stitch["in_tree"]
+                and _avals(inputs) == self._stitch["in_avals"])
+
+    def _decode_dispatch(self, cache, tok, extra):
+        """One decode step through the stitched artifact when eligible,
+        else the jitted step — polling the upgrade each call (the scheduler
+        path, so a request stream upgrades mid-stream)."""
+        if self.stitch_service is None:
+            return self._decode(self.params, cache, tok, **extra)
+        self._poll_stitch(cache, tok, extra)
+        if self._use_stitched(cache, tok, extra):
+            return self._stitch_decode(cache, tok, extra)
+        return self._decode(self.params, cache, tok, **extra)
+
+    # -- continuous batching ---------------------------------------------------
+    @property
+    def scheduler(self):
+        """Lazy slot scheduler over this engine's decode dispatch."""
+        if self._scheduler is None:
+            from .scheduler import Scheduler, SchedulerConfig
+            cfg = SchedulerConfig(
+                slots=self.cfg.batch, max_len=self.cfg.max_len,
+                max_new_tokens=self.cfg.max_new_tokens, eos_id=self.cfg.eos_id)
+            self._scheduler = Scheduler(
+                self.model, self.params, cfg,
+                decode_fn=lambda cache, tok: self._decode_dispatch(cache, tok, {}),
+                status_fn=lambda: self.stitch_status)
+        return self._scheduler
+
+    def submit(self, prompt, max_new_tokens: int | None = None, **kw) -> int:
+        """Enqueue one request (1-D prompt); returns its request id."""
+        return self.scheduler.submit(prompt, max_new_tokens=max_new_tokens, **kw)
+
+    def step(self):
+        """Run one scheduler step (refill -> batched decode -> evict);
+        returns its :class:`~repro.serve.metrics.StepMetrics`."""
+        return self.scheduler.step()
+
+    def drain(self, max_steps: int | None = None):
+        """Step until all submitted requests finish; returns the
+        :class:`~repro.serve.queue.FinishedRequest` list in completion order."""
+        return self.scheduler.drain(max_steps=max_steps)
+
+    def serve_report(self) -> dict:
+        """Aggregate scheduler metrics (empty if continuous mode unused)."""
+        if self._scheduler is None:
+            return {}
+        return self._scheduler.metrics.summary()
+
+    # -- static serving loop ---------------------------------------------------
+    def generate(self, prompts: np.ndarray, prompt_lens=None, **extra) -> np.ndarray:
+        """prompts: (batch, prompt_len) int32 -> (batch, max_new_tokens).
+
+        ``prompt_lens`` (per-row true lengths) switches to the ragged static
+        path: prompts are padded to the same pow2 bucket the continuous
+        scheduler admits at, logits come from each row's true last position,
+        and the decode runs with a per-row length vector — the per-request
+        reference the scheduler is tested token-for-token against."""
         B, P = prompts.shape
         assert B == self.cfg.batch
+        if prompt_lens is not None:
+            return self._generate_ragged(prompts, prompt_lens, extra)
         logits, cache = self.model.prefill(
             self.params, jnp.asarray(prompts, jnp.int32), **extra)
         # decode cache from prefill may be shorter than max_len; re-home it
@@ -145,24 +239,14 @@ class Engine:
             cache["v"] = jnp.pad(cache["v"], [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
 
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        if self.stitch_service is not None:
-            if self._stitch is None:
-                self._prepare_stitch(cache, tok, extra)
-            elif self.stitch_status in ("miss", "pending"):
-                self._refresh_stitch()
-        # the stitched executable is shape-specialized at trace time; any
-        # structure OR leaf-shape drift (e.g. per-request encoder outputs of
-        # a new length) falls back to the jitted step for this call
-        inputs = (self.params, cache, tok, extra)
-        use_stitched = (
-            self.cfg.stitch_execute
-            and self._stitch
-            and self._stitch.get("executable")
-            and self._stitch.get("compiled") is not None
-            and jax.tree_util.tree_structure(inputs) == self._stitch["in_tree"]
-            and _avals(inputs) == self._stitch["in_avals"]
-        )
+        return self._decode_loop(cache, tok, extra)
 
+    def _decode_loop(self, cache, tok, extra) -> np.ndarray:
+        """Lock-step greedy decode for ``max_new_tokens`` steps; the stitch
+        eligibility decision is made once per call (shapes are loop-
+        invariant)."""
+        self._poll_stitch(cache, tok, extra)
+        use_stitched = self._use_stitched(cache, tok, extra)
         out = []
         for _ in range(self.cfg.max_new_tokens):
             out.append(np.asarray(tok))
@@ -172,3 +256,23 @@ class Engine:
                 logits, cache = self._decode(self.params, cache, tok, **extra)
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         return np.concatenate(out, axis=1)
+
+    def _generate_ragged(self, prompts: np.ndarray, prompt_lens, extra) -> np.ndarray:
+        from .scheduler import ADMISSION_BUCKET, RAGGED_FAMILIES
+        if self.model.cfg.family not in RAGGED_FAMILIES:
+            raise NotImplementedError(
+                f"ragged generate (prompt_lens) supports families "
+                f"{RAGGED_FAMILIES}, got {self.model.cfg.family!r}")
+        B, P = prompts.shape
+        lens = np.asarray(prompt_lens, np.int32).reshape(-1)
+        assert lens.shape == (B,) and int(lens.max()) <= P
+        # pad to the scheduler's admission bucket so a batch=1 ragged run is
+        # the scheduler's bitwise reference
+        pb = min(ADMISSION_BUCKET.bucket_dim(P), self.cfg.max_len)
+        padded = np.zeros((B, pb), np.int32)
+        padded[:, :P] = prompts
+        logits, cache = self._ragged_prefill(
+            self.params, jnp.asarray(padded), jnp.asarray(lens),
+            ml=self.cfg.max_len, **extra)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return self._decode_loop(cache, tok, extra)

@@ -1,0 +1,93 @@
+"""Serving metrics: per-step scheduler telemetry + request-latency summary.
+
+The scheduler emits one :class:`StepMetrics` per decode step; the
+:class:`ServeMetrics` aggregator folds them with the stream of
+:class:`~repro.serve.queue.FinishedRequest` records into the numbers an
+operator actually watches: occupancy, queue depth, useful tokens/sec, and
+end-to-end / time-to-first-token latency percentiles.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .queue import FinishedRequest
+
+__all__ = ["StepMetrics", "ServeMetrics", "percentiles"]
+
+
+@dataclass
+class StepMetrics:
+    """One scheduler iteration (admissions happen before the decode).  With
+    EOS off the scheduler chunks predictable decode steps, so ``tokens``
+    may cover several tokens per active slot in one iteration."""
+
+    step: int
+    active: int                 # occupied slots during the decode
+    slots: int
+    queue_depth: int            # after admissions
+    admissions: int
+    evictions: int
+    tokens: int                 # useful tokens emitted this step
+    step_seconds: float
+    stitch_status: str | None = None   # None|hit|miss|pending|error
+
+    @property
+    def occupancy(self) -> float:
+        return self.active / self.slots if self.slots else 0.0
+
+
+def percentiles(values, ps=(50, 95, 99)) -> dict[str, float]:
+    if not len(values):
+        return {f"p{p}": 0.0 for p in ps}
+    arr = np.asarray(values, np.float64)
+    return {f"p{p}": float(np.percentile(arr, p)) for p in ps}
+
+
+@dataclass
+class ServeMetrics:
+    steps: list[StepMetrics] = field(default_factory=list)
+    finished: list[FinishedRequest] = field(default_factory=list)
+
+    def record_step(self, m: StepMetrics) -> None:
+        self.steps.append(m)
+
+    def record_finished(self, f: FinishedRequest) -> None:
+        self.finished.append(f)
+
+    # -- aggregates -----------------------------------------------------------
+    @property
+    def total_tokens(self) -> int:
+        return sum(m.tokens for m in self.steps)
+
+    @property
+    def elapsed(self) -> float:
+        return sum(m.step_seconds for m in self.steps)
+
+    def summary(self) -> dict:
+        steps = self.steps
+        active_steps = [m for m in steps if m.active]
+        out = {
+            "steps": len(steps),
+            "requests_finished": len(self.finished),
+            "total_tokens": self.total_tokens,
+            "elapsed_s": self.elapsed,
+            "tokens_per_sec": self.total_tokens / max(self.elapsed, 1e-9),
+            "mean_occupancy": (float(np.mean([m.occupancy for m in active_steps]))
+                               if active_steps else 0.0),
+            "peak_queue_depth": max((m.queue_depth for m in steps), default=0),
+            "admissions": sum(m.admissions for m in steps),
+            "evictions": sum(m.evictions for m in steps),
+        }
+        if self.finished:
+            out["e2e_latency_s"] = percentiles([f.e2e_latency for f in self.finished])
+            out["ttft_s"] = percentiles([f.ttft for f in self.finished])
+            out["queue_latency_s"] = percentiles(
+                [f.queue_latency for f in self.finished])
+            out["finish_reasons"] = {
+                r: sum(1 for f in self.finished if f.finish_reason == r)
+                for r in sorted({f.finish_reason for f in self.finished})
+            }
+        return out

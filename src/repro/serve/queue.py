@@ -1,0 +1,94 @@
+"""Request queue for the continuous-batching serving tier.
+
+A :class:`Request` is one generation job: a 1-D prompt plus a per-request
+token budget.  :class:`RequestQueue` is the FIFO the scheduler admits from —
+deliberately simple (no priorities, no preemption): the scheduling smarts
+live in the slot manager, the queue just buffers the open-loop arrival
+process and tracks depth statistics for the metrics report.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+__all__ = ["Request", "FinishedRequest", "RequestQueue"]
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                    # (P,) int32 token ids
+    max_new_tokens: int
+    arrival_time: float = 0.0             # caller clock; metrics only
+    extra: dict[str, Any] = field(default_factory=dict)   # per-request prefill kwargs
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid}: max_new_tokens < 1")
+
+
+@dataclass
+class FinishedRequest:
+    """A completed request plus the timestamps the latency report needs."""
+
+    rid: int
+    prompt_len: int
+    tokens: np.ndarray                    # (n,) generated ids, EOS included if hit
+    finish_reason: str                    # "eos" | "length"
+    arrival_time: float
+    admit_time: float                     # admission (bucketed prefill) instant
+    first_token_time: float               # == admit_time: prefill emits token 0
+    finish_time: float
+    admit_step: int
+    finish_step: int
+
+    @property
+    def e2e_latency(self) -> float:
+        return self.finish_time - self.arrival_time
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def queue_latency(self) -> float:
+        return self.admit_time - self.arrival_time
+
+
+class RequestQueue:
+    """FIFO of pending requests with depth accounting."""
+
+    def __init__(self):
+        self._q: deque[Request] = deque()
+        self._next_rid = 0
+        self.total_submitted = 0
+        self.peak_depth = 0
+
+    def submit(self, prompt, max_new_tokens: int, rid: int | None = None,
+               arrival_time: float = 0.0, extra: dict | None = None) -> int:
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid) + 1
+        req = Request(rid=rid, prompt=np.asarray(prompt),
+                      max_new_tokens=max_new_tokens,
+                      arrival_time=arrival_time, extra=dict(extra or {}))
+        self._q.append(req)
+        self.total_submitted += 1
+        self.peak_depth = max(self.peak_depth, len(self._q))
+        return rid
+
+    def pop(self) -> Request | None:
+        return self._q.popleft() if self._q else None
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)

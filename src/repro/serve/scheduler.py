@@ -1,0 +1,297 @@
+"""Slot-based continuous-batching scheduler (the serving tentpole).
+
+The decode batch is a fixed array of ``slots``; each slot independently
+holds one in-flight request at its own sequence position.  The KV cache is
+a single batched pytree whose ``"length"`` leaf is a per-slot *vector* —
+the model's decode step (``dense`` / ``moe`` / ``vlm`` families) accepts it
+and writes each slot's new KV at its own offset, so one batched decode step
+advances every request regardless of where each one is in its stream.
+
+Lifecycle per :meth:`Scheduler.step`:
+
+1. **Refill** — free slots are filled from the FIFO queue.  Admission runs
+   a *bucketed* prefill: the prompt is right-padded to the next power-of-two
+   length (same :class:`~repro.cache.policy.BucketPolicy` rule the
+   StitchCache keys on), so a refill at a nearby prompt length replays the
+   already-compiled prefill executable — and, because the decode graph's
+   shapes never change, the stitched decode plan — instead of forcing a
+   recompile.  Causal masking makes the pad positions inert, and logits are
+   gathered at the true last position, so bucketing never changes tokens
+   (dense/vlm; see the moe capacity caveat on :data:`RAGGED_FAMILIES`).
+2. **Decode** — one batched step over all slots (inactive slots ride along;
+   their rows are ignored, and admission's slot write resets them).
+3. **Evict** — slots whose request hit EOS (``eos_id >= 0``) or its
+   per-request ``max_new_tokens`` are completed and freed; the next step's
+   refill reuses them immediately.
+
+The scheduler is deliberately model-API-thin: it is handed a
+``decode_fn(cache, tok) -> (logits, cache)`` (the engine injects its
+stitched-or-jitted dispatch there) and drives ``model.prefill`` itself.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache.policy import BucketPolicy
+
+from .metrics import ServeMetrics, StepMetrics
+from .queue import FinishedRequest, Request, RequestQueue
+
+__all__ = ["SchedulerConfig", "Scheduler", "RAGGED_FAMILIES"]
+
+# families whose decode step supports a per-slot length vector AND whose
+# prefill is pad-invariant under causal masking (SSM/hybrid state mixes pad
+# tokens in, so bucketed admission would change numerics there).  Caveat:
+# moe is pad-invariant only while no expert overflows its capacity —
+# GShard token-choice dispatch couples rows through the shared capacity
+# budget (pad/ride-along tokens can displace real ones on overflow), the
+# same coupling a static moe batch already has.  dense/vlm are exact.
+RAGGED_FAMILIES = ("dense", "moe", "vlm")
+
+# the admission bucket rule, shared with Engine._generate_ragged so the
+# static reference path pads exactly like the scheduler
+ADMISSION_BUCKET = BucketPolicy(mode="pow2", min_dim=1)
+
+
+@dataclass
+class SchedulerConfig:
+    slots: int
+    max_len: int                        # KV capacity per slot
+    max_new_tokens: int = 32            # default per-request budget
+    eos_id: int = -1                    # -1: never stop early
+    # pow2 admission buckets; min_dim=1 so even short prompts coalesce
+    # (the cache-key default of 16 would give every short length its own
+    # compile)
+    bucket: BucketPolicy = field(default_factory=lambda: ADMISSION_BUCKET)
+
+
+@dataclass
+class _Slot:
+    req: Request
+    tokens: list[int]
+    admit_time: float
+    admit_step: int
+
+
+class Scheduler:
+    def __init__(self, model, params, cfg: SchedulerConfig,
+                 decode_fn: Callable, status_fn: Callable | None = None,
+                 clock: Callable[[], float] = time.monotonic):
+        if model.cfg.family not in RAGGED_FAMILIES:
+            raise NotImplementedError(
+                f"continuous batching supports families {RAGGED_FAMILIES}, "
+                f"got {model.cfg.family!r} (its decode state is not "
+                f"pad-invariant / per-slot addressable)")
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.decode_fn = decode_fn
+        self.status_fn = status_fn or (lambda: None)
+        self.clock = clock
+
+        self.queue = RequestQueue()
+        self.metrics = ServeMetrics()
+        cache = model.init_cache(cfg.slots, cfg.max_len)
+        cache = dict(cache)
+        cache["length"] = jnp.zeros((cfg.slots,), jnp.int32)
+        self.cache = cache
+        self.tok = np.zeros((cfg.slots, 1), np.int32)
+        self.slots: list[_Slot | None] = [None] * cfg.slots
+        self.step_count = 0
+        # one compiled prefill per (bucket length, extra-structure) — this
+        # memo is what bucketed admission exists to keep small
+        self._prefill_fns: dict[tuple, Callable] = {}
+        self._write_fns: dict[tuple, Callable] = {}
+
+    # -- admission -------------------------------------------------------------
+    def bucket_len(self, prompt_len: int) -> int:
+        return min(self.cfg.bucket.bucket_dim(prompt_len), self.cfg.max_len)
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def submit(self, prompt, max_new_tokens: int | None = None,
+               rid: int | None = None, arrival_time: float | None = None,
+               extra: dict | None = None) -> int:
+        """Enqueue one request; returns its id."""
+        n_new = self.cfg.max_new_tokens if max_new_tokens is None else max_new_tokens
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) + n_new > self.cfg.max_len:
+            raise ValueError(
+                f"prompt_len={len(prompt)} + max_new_tokens={n_new} exceeds "
+                f"max_len={self.cfg.max_len}")
+        at = self.clock() if arrival_time is None else arrival_time
+        return self.queue.submit(prompt, n_new, rid=rid, arrival_time=at,
+                                 extra=extra)
+
+    def _prefill_fn(self, pb: int, extra: dict) -> Callable:
+        key = (pb, tuple(sorted(extra)),
+               tuple((np.shape(v), str(np.asarray(v).dtype))
+                     for _, v in sorted(extra.items())))
+        fn = self._prefill_fns.get(key)
+        if fn is None:
+            fn = jax.jit(lambda p, toks, tl, **kw: self.model.prefill(
+                p, toks, true_len=tl, **kw))
+            self._prefill_fns[key] = fn
+        return fn
+
+    def _write_fn(self, pb: int) -> Callable:
+        """Jitted slot write: splice a (·, 1, pb, ·, ·) prefill cache into
+        row ``slot`` of the batched decode cache (traced index — one compile
+        per bucket, not per slot)."""
+        fn = self._write_fns.get(pb)
+        if fn is None:
+            def write(cache, pcache, slot):
+                out = dict(cache)
+                for k, leaf in cache.items():
+                    if k == "length":
+                        continue
+                    upd = pcache[k].astype(leaf.dtype)
+                    start = (0, slot) + (0,) * (leaf.ndim - 2)
+                    out[k] = jax.lax.dynamic_update_slice(leaf, upd, start)
+                out["length"] = cache["length"].at[slot].set(
+                    pcache["length"][0])
+                return out
+            fn = jax.jit(write)
+            self._write_fns[pb] = fn
+        return fn
+
+    def _finish(self, slot_state: _Slot, reason: str, step: int) -> FinishedRequest:
+        req = slot_state.req
+        fin = FinishedRequest(
+            rid=req.rid, prompt_len=len(req.prompt),
+            tokens=np.asarray(slot_state.tokens, np.int32),
+            finish_reason=reason,
+            arrival_time=req.arrival_time,
+            admit_time=slot_state.admit_time,
+            first_token_time=slot_state.admit_time,
+            finish_time=self.clock(),
+            admit_step=slot_state.admit_step, finish_step=step)
+        self.metrics.record_finished(fin)
+        return fin
+
+    def _admit(self, slot: int, req: Request) -> tuple[int, int]:
+        """Bucketed prefill into ``slot``; returns (tokens_emitted, evictions)
+        — a request whose budget is 1 (or whose first token is EOS) finishes
+        at admission without ever occupying the slot."""
+        P = len(req.prompt)
+        pb = self.bucket_len(P)
+        padded = np.zeros((1, pb), np.int32)
+        padded[0, :P] = req.prompt
+        logits, pcache = self._prefill_fn(pb, req.extra)(
+            self.params, jnp.asarray(padded),
+            jnp.asarray([P], jnp.int32), **req.extra)
+        first = int(jnp.argmax(logits, axis=-1)[0])
+        state = _Slot(req=req, tokens=[first], admit_time=self.clock(),
+                      admit_step=self.step_count)
+        eos = self.cfg.eos_id >= 0 and first == self.cfg.eos_id
+        if eos or req.max_new_tokens == 1:
+            self._finish(state, "eos" if eos else "length", self.step_count)
+            return 1, 1
+        self.cache = self._write_fn(pb)(self.cache, pcache,
+                                        jnp.asarray(slot, jnp.int32))
+        self.tok[slot, 0] = first
+        self.slots[slot] = state
+        return 1, 0
+
+    def _refill(self) -> tuple[int, int, int]:
+        """Fill free slots from the queue; returns (admissions, tokens,
+        evictions)."""
+        admissions = tokens = evictions = 0
+        for slot in range(self.cfg.slots):
+            while self.slots[slot] is None and self.queue:
+                req = self.queue.pop()
+                t, e = self._admit(slot, req)
+                admissions += 1
+                tokens += t
+                evictions += e
+                if e == 0:
+                    break               # slot now occupied
+        return admissions, tokens, evictions
+
+    def _chunk_len(self) -> int:
+        """Decode steps safely runnable before the next scheduling decision.
+
+        With EOS off, evictions are budget-exhaustions — predictable on the
+        host — and after a refill either the queue is empty or every slot is
+        full, so no admission can happen before the earliest budget runs
+        out.  Chunking those steps keeps the decode stream on device (one
+        argmax readback per chunk instead of per token).  With EOS on, every
+        token is a potential eviction: chunk = 1."""
+        if self.cfg.eos_id >= 0:
+            return 1
+        return min(s.req.max_new_tokens - len(s.tokens)
+                   for s in self.slots if s is not None)
+
+    # -- one scheduling iteration ---------------------------------------------
+    def step(self) -> StepMetrics:
+        t0 = self.clock()
+        step = self.step_count
+        admissions, tokens, evictions = self._refill()
+        active = self.n_active
+
+        if active:
+            chunk = self._chunk_len()
+            cache, tok = self.cache, jnp.asarray(self.tok)
+            toks_dev = []
+            for _ in range(chunk):
+                logits, cache = self.decode_fn(cache, tok)
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+                toks_dev.append(tok)
+            self.cache = cache
+            # the chunk's one host sync: token ids are needed for EOS /
+            # budget checks and the next iteration's input.  Free slots ride
+            # along (their rows are ignored and admission's slot write
+            # resets both KV and length), so nothing else syncs.
+            nxt = np.asarray(jnp.concatenate(toks_dev, axis=1))   # (slots, chunk)
+            for slot, state in enumerate(self.slots):
+                if state is None:
+                    continue
+                done = None
+                for tok_i in nxt[slot].tolist():
+                    state.tokens.append(int(tok_i))
+                    tokens += 1
+                    if self.cfg.eos_id >= 0 and tok_i == self.cfg.eos_id:
+                        done = "eos"
+                        break
+                    if len(state.tokens) >= state.req.max_new_tokens:
+                        done = "length"
+                        break
+                if done is not None:
+                    self._finish(state, done, step)
+                    self.slots[slot] = None
+                    evictions += 1
+                    self.tok[slot, 0] = 0
+                else:
+                    self.tok[slot, 0] = int(nxt[slot, -1])
+
+        m = StepMetrics(
+            step=step, active=active, slots=self.cfg.slots,
+            queue_depth=len(self.queue), admissions=admissions,
+            evictions=evictions, tokens=tokens,
+            step_seconds=self.clock() - t0, stitch_status=self.status_fn())
+        self.metrics.record_step(m)
+        self.step_count += 1
+        return m
+
+    def drain(self, max_steps: int | None = None) -> list[FinishedRequest]:
+        """Step until queue and slots are empty; returns finished requests in
+        completion order."""
+        already = len(self.metrics.finished)
+        budget = max_steps if max_steps is not None else (
+            10 * self.cfg.max_len * (len(self.queue) + self.n_active + 1))
+        for _ in range(budget):
+            if not self.queue and not self.n_active:
+                break
+            self.step()
+        if self.queue or self.n_active:
+            raise RuntimeError(f"drain did not converge in {budget} steps")
+        return self.metrics.finished[already:]

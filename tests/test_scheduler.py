@@ -1,0 +1,210 @@
+"""Continuous-batching scheduler: correctness vs the static engine,
+eviction/refill/EOS behavior, bucketed admission, metrics, and the CI
+perf-regression gate."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_reduced
+from repro.models import build_model
+from repro.serve import Engine, ServeConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_reduced("qwen3_1_7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _reference(model, params, prompt, n_new, max_len):
+    """Per-request static-batch run (ragged generate, batch=1)."""
+    eng = Engine(model, params,
+                 ServeConfig(batch=1, max_len=max_len, max_new_tokens=n_new))
+    return eng.generate(prompt[None].copy(), prompt_lens=[len(prompt)])[0]
+
+
+def _workload(cfg, seed=42):
+    rng = np.random.default_rng(seed)
+    lens = [5, 12, 9, 3, 17, 7, 11]
+    news = [6, 3, 9, 5, 4, 8, 2]
+    prompts = [rng.integers(0, cfg.vocab, (p,)).astype(np.int32) for p in lens]
+    return prompts, news
+
+
+def test_continuous_matches_static_token_for_token(setup):
+    """Ragged prompts + mixed budgets through 3 slots (7 requests, so slots
+    are evicted and refilled mid-stream) produce exactly the tokens of
+    per-request static-batch runs."""
+    cfg, model, params = setup
+    prompts, news = _workload(cfg)
+    eng = Engine(model, params, ServeConfig(batch=3, max_len=64))
+    for p, n in zip(prompts, news):
+        eng.submit(p, max_new_tokens=n)
+    fins = {f.rid: f for f in eng.drain()}
+    assert len(fins) == len(prompts)
+    for rid, (p, n) in enumerate(zip(prompts, news)):
+        ref = _reference(model, params, p, n, 64)
+        np.testing.assert_array_equal(fins[rid].tokens, ref,
+                                      err_msg=f"request {rid}")
+        assert fins[rid].finish_reason == "length"
+        assert fins[rid].prompt_len == len(p)
+    # forced mid-stream recycling: more finishes than slots
+    summary = eng.serve_report()
+    assert summary["evictions"] == len(prompts)
+    assert summary["admissions"] == len(prompts)
+
+
+def test_eos_evicts_and_truncates(setup):
+    """With eos_id >= 0, a slot is evicted the moment it emits EOS and its
+    output equals the static run truncated at the first EOS."""
+    cfg, model, params = setup
+    prompts, news = _workload(cfg)
+    refs = [_reference(model, params, p, n, 64)
+            for p, n in zip(prompts, news)]
+    # pick an eos id that actually occurs mid-stream in some reference
+    eos = int(refs[0][min(2, len(refs[0]) - 1)])
+
+    eng = Engine(model, params, ServeConfig(batch=2, max_len=64, eos_id=eos))
+    for p, n in zip(prompts, news):
+        eng.submit(p, max_new_tokens=n)
+    fins = {f.rid: f for f in eng.drain()}
+    hit_eos = 0
+    for rid, ref in enumerate(refs):
+        cut = np.where(ref == eos)[0]
+        expect = ref[:cut[0] + 1] if len(cut) else ref
+        np.testing.assert_array_equal(fins[rid].tokens, expect,
+                                      err_msg=f"request {rid}")
+        if len(cut):
+            hit_eos += 1
+            assert fins[rid].finish_reason == "eos"
+            assert fins[rid].tokens[-1] == eos
+        else:
+            assert fins[rid].finish_reason == "length"
+    assert hit_eos >= 1   # the workload actually exercised EOS eviction
+
+
+def test_bucketed_admission_reuses_prefill_compiles(setup):
+    """Prompt lengths inside one pow2 bucket share a single compiled
+    prefill; a new bucket adds exactly one."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(0)
+    eng = Engine(model, params, ServeConfig(batch=2, max_len=64))
+    for p in (5, 6, 7, 8):      # all bucket to 8
+        eng.submit(rng.integers(0, cfg.vocab, (p,)).astype(np.int32),
+                   max_new_tokens=2)
+    eng.drain()
+    sch = eng.scheduler
+    assert len(sch._prefill_fns) == 1
+    assert sch.bucket_len(5) == sch.bucket_len(8) == 8
+    eng.submit(rng.integers(0, cfg.vocab, (9,)).astype(np.int32),
+               max_new_tokens=2)   # bucket 16
+    eng.drain()
+    assert len(sch._prefill_fns) == 2
+    assert sch.bucket_len(9) == 16
+    # bucket is capped at the KV capacity
+    assert sch.bucket_len(63) == 64
+
+
+def test_metrics_and_occupancy(setup):
+    cfg, model, params = setup
+    prompts, news = _workload(cfg)
+    eng = Engine(model, params, ServeConfig(batch=3, max_len=64))
+    for p, n in zip(prompts, news):
+        eng.submit(p, max_new_tokens=n)
+    fins = eng.drain()
+    s = eng.serve_report()
+    assert s["requests_finished"] == len(prompts)
+    assert s["total_tokens"] == sum(len(f.tokens) for f in fins) == sum(news)
+    assert 0.0 < s["mean_occupancy"] <= 1.0
+    assert s["tokens_per_sec"] > 0
+    assert s["peak_queue_depth"] >= len(prompts) - 3   # slots admitted first
+    for f in fins:
+        assert f.finish_time >= f.admit_time >= f.arrival_time
+    m = eng.scheduler.metrics.steps
+    assert all(st.active <= st.slots for st in m)
+    # drained: queue empty, all slots free
+    assert len(eng.scheduler.queue) == 0 and eng.scheduler.n_active == 0
+
+
+def test_submit_validates_capacity(setup):
+    cfg, model, params = setup
+    eng = Engine(model, params, ServeConfig(batch=2, max_len=16))
+    with pytest.raises(ValueError):
+        eng.submit(np.arange(10, dtype=np.int32), max_new_tokens=10)
+    with pytest.raises(ValueError):
+        eng.submit(np.array([], dtype=np.int32), max_new_tokens=2)
+
+
+def test_unsupported_family_raises():
+    from repro.serve import SchedulerConfig, Scheduler
+    cfg = get_reduced("falcon_mamba_7b")      # ssm: prefill not pad-invariant
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError):
+        Scheduler(model, params, SchedulerConfig(slots=2, max_len=32),
+                  decode_fn=lambda c, t: None)
+    # the ragged static path guards the same families
+    eng = Engine(model, params, ServeConfig(batch=1, max_len=32))
+    with pytest.raises(NotImplementedError):
+        eng.generate(np.zeros((1, 8), np.int32), prompt_lens=[8])
+
+
+def test_drain_converges_at_exact_step_budget(setup):
+    """A workload finishing on the last allowed step is not a convergence
+    failure."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(0)
+    eng = Engine(model, params, ServeConfig(batch=2, max_len=32))
+    eng.submit(rng.integers(0, cfg.vocab, (4,)).astype(np.int32),
+               max_new_tokens=3)
+    # chunked decode: admission step + one 2-token chunk = 2 iterations
+    fins = eng.drain(max_steps=2)
+    assert len(fins) == 1 and len(fins[0].tokens) == 3
+
+
+def test_static_ragged_generate_matches_exact_prefill(setup):
+    """The ragged static path (bucketed prefill + per-row true_len) equals
+    the legacy rectangular path when the batch is not actually ragged."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(0, cfg.vocab, (2, 8)).astype(np.int32)
+    eng = Engine(model, params, ServeConfig(batch=2, max_len=48,
+                                            max_new_tokens=6))
+    legacy = eng.generate(prompts.copy())
+    ragged = eng.generate(prompts.copy(), prompt_lens=[8, 8])
+    np.testing.assert_array_equal(legacy, ragged)
+
+
+def test_check_regression_gate():
+    """The CI gate passes an identical record, flags a >10% kernel-count or
+    modeled-time regression, and fails on lost workload coverage."""
+    from benchmarks.check_regression import compare
+    base = {"workloads": {
+        "wl_a": {"kernels": {"stitch": 10}, "modeled_time_s": {"stitch": 1e-3}},
+        "wl_b": {"kernels": {"stitch": 20}, "modeled_time_s": {"stitch": 2e-3}},
+    }}
+    same = {"workloads": {k: dict(v) for k, v in base["workloads"].items()}}
+    failures, _ = compare(base, same)
+    assert failures == []
+
+    worse = {"workloads": {
+        "wl_a": {"kernels": {"stitch": 12}, "modeled_time_s": {"stitch": 1e-3}},
+        "wl_b": {"kernels": {"stitch": 20}, "modeled_time_s": {"stitch": 2.3e-3}},
+    }}
+    failures, _ = compare(base, worse)
+    assert len(failures) == 2          # +20% kernels, +15% modeled time
+
+    within = {"workloads": {
+        "wl_a": {"kernels": {"stitch": 11}, "modeled_time_s": {"stitch": 1e-3}},
+        "wl_b": {"kernels": {"stitch": 20}, "modeled_time_s": {"stitch": 2.1e-3}},
+    }}
+    failures, _ = compare(base, within)   # <= 10%: allowed
+    assert failures == []
+
+    missing = {"workloads": {"wl_a": base["workloads"]["wl_a"]}}
+    failures, _ = compare(base, missing)
+    assert any("missing" in f for f in failures)
