@@ -10,7 +10,11 @@ in the record are informational and too noisy to gate):
 * per-workload **stitched kernel count** — more kernels than baseline means
   fusion got worse (the paper's kernel-compression win eroding);
 * per-workload **modeled stitch step time** — the cost model's end-to-end
-  estimate regressing means a slower plan shipped.
+  estimate regressing means a slower plan shipped;
+* **training metrics** — stitched kernel count / modeled time of the traced
+  backward graph, and the packed AdamW+clip update's kernel count (1 when
+  the whole multi-tensor update shares a single packed kernel).  Wall-clock
+  step times in the record are informational only.
 
 A candidate fails when either metric exceeds baseline by more than
 ``--tolerance`` (default 10%).  Workloads present only in the candidate are
@@ -30,6 +34,14 @@ TOLERANCE = 0.10
 METRICS = (
     (("kernels", "stitch"), "stitched_kernels"),
     (("modeled_time_s", "stitch"), "modeled_stitch_time_s"),
+)
+
+# json paths inside the top-level "training" section — lower is better
+TRAINING_METRICS = (
+    (("grad", "kernels", "stitch"), "grad_stitched_kernels"),
+    (("grad", "modeled_time_s", "stitch"), "grad_modeled_stitch_time_s"),
+    (("packed_update", "kernels", "stitch"), "packed_update_kernels"),
+    (("packed_update", "modeled_time_s", "stitch"), "packed_update_modeled_time_s"),
 )
 
 
@@ -68,6 +80,28 @@ def compare(baseline: dict, candidate: dict, tolerance: float = TOLERANCE):
             lines.append(f"{name},{label},{b:g},{c:g},{ratio:.3f},{verdict}")
     for name in sorted(set(cand_wl) - set(base_wl)):
         lines.append(f"{name},-,-,-,-,NEW (not gated)")
+
+    base_tr = baseline.get("training")
+    if base_tr is not None:
+        cand_tr = candidate.get("training")
+        if cand_tr is None:
+            failures.append("training: section missing from candidate record")
+        else:
+            for path, label in TRAINING_METRICS:
+                b = _get(base_tr, path)
+                c = _get(cand_tr, path)
+                if b is None or c is None:
+                    failures.append(f"training.{label}: metric missing "
+                                    f"(baseline={b}, candidate={c})")
+                    continue
+                ratio = c / b if b else float("inf") if c else 1.0
+                verdict = "OK"
+                if ratio > 1.0 + tolerance:
+                    verdict = "REGRESSION"
+                    failures.append(
+                        f"training.{label}: {b:g} -> {c:g} "
+                        f"(+{100 * (ratio - 1):.1f}% > {100 * tolerance:.0f}%)")
+                lines.append(f"training,{label},{b:g},{c:g},{ratio:.3f},{verdict}")
     return failures, lines
 
 

@@ -26,7 +26,18 @@ from .ir import Graph, OpKind, OpNode
 from .pattern import FusionPattern
 from .templates import Template
 
-__all__ = ["EW_OPS", "eval_node", "build_reference_fn", "build_per_op_fns", "emit_source"]
+__all__ = ["EW_OPS", "canonical_dtype", "eval_node", "build_reference_fn",
+           "build_per_op_fns", "emit_source"]
+
+
+def canonical_dtype(dtype) -> jnp.dtype:
+    """The dtype JAX will actually store under the current x64 setting.
+
+    Traced graphs (and np scalar constants) may carry 64-bit dtypes; asking
+    jnp for them with x64 disabled emits a truncation ``UserWarning`` per
+    call.  Canonicalizing once keeps the graph dtype authoritative without
+    ever requesting an unavailable width."""
+    return jax.dtypes.canonicalize_dtype(jnp.dtype(dtype))
 
 
 # -- elementwise vocabulary --------------------------------------------------
@@ -56,6 +67,12 @@ EW_OPS: dict[str, Callable] = {
     "relu": jax.nn.relu,
     "softplus": jax.nn.softplus,
     "select": lambda c, a, b: jnp.where(c, a, b),
+    "cos": lax.cos,
+    "sin": lax.sin,
+    "and": lambda a, b: a & b,
+    "or": lambda a, b: a | b,
+    "not": lambda a: ~a,
+    "xor": lambda a, b: a ^ b,
     "ge": lambda a, b: (a >= b).astype(a.dtype),
     "gt": lambda a, b: (a > b).astype(a.dtype),
     "le": lambda a, b: (a <= b).astype(a.dtype),
@@ -78,12 +95,19 @@ def eval_node(node: OpNode, operands: list, g: Graph | None = None):
     if k is OpKind.ELEMENTWISE:
         op = node.attrs["op"]
         if op == "convert":
-            return operands[0].astype(node.dtype)
+            return operands[0].astype(canonical_dtype(node.dtype))
         fn = EW_OPS.get(op)
         if fn is None:
             raise NotImplementedError(f"elementwise op {op!r}")
         # numpy-style broadcasting between operands of different ranks
-        return fn(*operands)
+        out = fn(*operands)
+        # the node's declared dtype is authoritative: comparison lambdas cast
+        # to their operand dtype, but traced graphs declare bool outputs that
+        # downstream logical ops (and/or/select) require
+        dt = canonical_dtype(node.dtype)
+        if out.dtype != dt:
+            out = out.astype(dt)
+        return out
     if k is OpKind.BROADCAST:
         return lax.broadcast_in_dim(
             operands[0], node.shape, tuple(node.attrs["bcast_dims"])
@@ -114,7 +138,7 @@ def eval_node(node: OpNode, operands: list, g: Graph | None = None):
         return jnp.take(table, idx.astype(jnp.int32), axis=0)
     if k is OpKind.TUPLE:
         return tuple(operands)
-    if k is OpKind.CUSTOM:
+    if k in (OpKind.CUSTOM, OpKind.SCATTER):
         if "project" in node.attrs:
             return operands[0][node.attrs["project"]]
         fn = node.attrs.get("eval_fn")
@@ -127,9 +151,9 @@ def source_value(node: OpNode, inputs: Mapping[str, jax.Array] | None = None):
     """Resolve a PARAMETER/CONSTANT node to a value: explicit input first,
     then the constant payload captured at trace time."""
     if inputs is not None and node.name in inputs:
-        return jnp.asarray(inputs[node.name], dtype=node.dtype)
+        return jnp.asarray(inputs[node.name], dtype=canonical_dtype(node.dtype))
     if node.kind is OpKind.CONSTANT and "value" in node.attrs:
-        return jnp.asarray(node.attrs["value"], dtype=node.dtype)
+        return jnp.asarray(node.attrs["value"], dtype=canonical_dtype(node.dtype))
     raise KeyError(f"missing input {node.name!r}")
 
 

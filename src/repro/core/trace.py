@@ -7,10 +7,13 @@ inside XLA and consumes HLO; this is our equivalent entry point).
 
 Coverage: the elementwise / broadcast / reshape / transpose / reduction /
 dot_general / gather vocabulary of StitchIR, with ``pjit``/``custom_jvp`` /
-``custom_vjp`` calls inlined.  Any other primitive becomes an executable
-CUSTOM node (it partitions fusion — same role as the paper's opaque ops —
-but the graph stays runnable end-to-end because the node carries a closure
-evaluating the original primitive).
+``custom_vjp`` calls inlined, plus the scatter family (first-class SCATTER
+nodes — the transpose of gather, surfaced by every embedding-table gradient).
+Any other primitive becomes an executable CUSTOM node (it partitions fusion —
+same role as the paper's opaque ops — but the graph stays runnable
+end-to-end because the node carries a closure evaluating the original
+primitive); backward passes built by ``jax.value_and_grad`` trace through
+the same entry point as forward code.
 """
 
 from __future__ import annotations
@@ -37,8 +40,13 @@ _EW_PRIMS = {
     "max": "max", "min": "min", "pow": "pow", "neg": "neg",
     "exp": "exp", "log": "log", "log1p": "log1p", "tanh": "tanh",
     "sqrt": "sqrt", "rsqrt": "rsqrt", "abs": "abs", "sign": "sign",
-    "erf": "erf", "logistic": "sigmoid",
+    "erf": "erf", "logistic": "sigmoid", "square": "square",
+    "cos": "cos", "sin": "sin",
     "ge": "ge", "gt": "gt", "le": "le", "lt": "lt", "eq": "eq",
+    "and": "and", "or": "or", "not": "not", "xor": "xor",
+    # backward-only spellings: the grad-accumulation add (symbolic-zero aware)
+    # is an ordinary add once both operands are materialized
+    "add_any": "add",
 }
 
 _REDUCE_PRIMS = {
@@ -48,6 +56,14 @@ _REDUCE_PRIMS = {
 
 _INLINE_CALLS = {"pjit", "jit", "custom_jvp_call", "custom_vjp_call",
                  "custom_jvp_call_jaxpr", "remat", "checkpoint", "closed_call"}
+
+# Backward-only data movement: the transpose of gather/dynamic-slice is a
+# scatter(-add), so every embedding-table gradient surfaces one.  They get a
+# first-class SCATTER kind (the planner already treats SCATTER as a fusion
+# partition op) but stay executable through the same closure mechanism as
+# CUSTOM nodes.
+_SCATTER_PRIMS = {"scatter", "scatter-add", "scatter-mul",
+                  "scatter-min", "scatter-max"}
 
 
 def _dtype_str(aval) -> str:
@@ -205,6 +221,16 @@ def trace_to_graph(fn: Callable, *example_args, name: str = "traced") -> tuple[G
             g.add(OpNode(nm, kind, shape, dtype, operands,
                          {"contract": (tuple(lc), tuple(rc)),
                           "batch": (tuple(lb), tuple(rb))}))
+        elif prim in _SCATTER_PRIMS and len(eqn.outvars) == 1:
+            params = dict(eqn.params)
+
+            def run_scatter(*vals, _prim=eqn.primitive, _params=params):
+                return _prim.bind(*vals, **_params)
+
+            nm = fresh(f"scatter_{prim.split('-')[-1]}")
+            g.add(OpNode(nm, OpKind.SCATTER, shape, dtype, operands,
+                         {"prim": prim, "params_sig": _stable_params_sig(params),
+                          "eval_fn": run_scatter}))
         elif prim == "stop_gradient" or prim == "copy":
             env[out] = operands[0]
             return
@@ -218,8 +244,14 @@ def trace_to_graph(fn: Callable, *example_args, name: str = "traced") -> tuple[G
         prim = eqn.primitive
         params = dict(eqn.params)
 
-        def run(*vals, _prim=prim, _params=params):
+        unwrap = prim.multiple_results and len(eqn.outvars) == 1
+
+        def run(*vals, _prim=prim, _params=params, _unwrap=unwrap):
             res = _prim.bind(*vals, **_params)
+            # a multiple_results primitive with ONE outvar (e.g. a scan whose
+            # carry is its only output) binds to a 1-element list
+            if _unwrap:
+                (res,) = res
             return res
 
         psig = _stable_params_sig(params)

@@ -143,6 +143,37 @@ class TemplateTuner:
             return None
         return plan
 
+    # -- abstract validation --------------------------------------------------
+    def validate(self, p: FusionPattern, fn: Callable) -> bool:
+        """Trace the stitched kernel abstractly and check its output avals.
+
+        ``pallas_call`` only traces the kernel body on first *call*, so an
+        analysis soundness gap (wild graphs: traced backward passes) would
+        otherwise surface as a TypeError at execution time deep inside a
+        compiled artifact.  eval_shape catches the whole class at tune time;
+        a failing candidate is discarded (callers fall back to fused-jnp,
+        numerics unaffected)."""
+        import jax
+        import jax.numpy as jnp
+
+        from .codegen import canonical_dtype
+
+        g = p.graph
+        try:
+            args = [
+                jax.ShapeDtypeStruct(g[i].shape, canonical_dtype(g[i].dtype))
+                for i in p.external_inputs
+            ]
+            outs = jax.eval_shape(fn, *args)
+            for name, o in zip(p.external_outputs, outs):
+                if tuple(o.shape) != tuple(g[name].shape):
+                    return False
+                if jnp.dtype(o.dtype) != canonical_dtype(g[name].dtype):
+                    return False
+        except Exception:
+            return False
+        return True
+
     # -- KernelEvalUpdate -----------------------------------------------------
     def _measure(self, fn: Callable, args: list, repeats: int = 3) -> float:
         fn(*args)  # warmup (trace+compile)
@@ -160,8 +191,8 @@ class TemplateTuner:
         from repro.kernels.stitched import StitchInfeasible, build_stitched_callable
 
         templates = generate_templates(p, self.cost)
-        best: TunedKernel | None = None
-        for template in templates:
+        candidates: list[tuple[float, int, TunedKernel]] = []
+        for i, template in enumerate(templates):
             plan = self.shared_planning(p, template)
             if plan is None:
                 continue  # infeasible template (paper: skip)
@@ -184,14 +215,13 @@ class TemplateTuner:
                     continue
             cand = TunedKernel(p, template, plan, modeled, measured, "pallas", fn)
             key = measured if measured is not None else modeled
-            best_key = (
-                best.measured_time
-                if best and best.measured_time is not None
-                else (best.modeled_time if best else float("inf"))
-            )
-            if best is None or key < best_key:
-                best = cand
-        return best
+            candidates.append((key, i, cand))
+        # best candidate first; abstract validation runs once per pattern in
+        # the common case and only walks down on analysis soundness gaps
+        for _key, _i, cand in sorted(candidates, key=lambda t: (t[0], t[1])):
+            if self.validate(p, cand.callable):
+                return cand
+        return None
 
     # -- plan replay (cache hits) --------------------------------------------
     def instantiate(
@@ -237,6 +267,8 @@ class TemplateTuner:
             fn = build_stitched_callable(
                 p, row_block=rb, scratch_ops=template.scratch_ops)
         except StitchInfeasible:
+            return None
+        if not self.validate(p, fn):
             return None
         return TunedKernel(p, template, plan, self.cost.fused_time(p), None,
                            "pallas", fn)

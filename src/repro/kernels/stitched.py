@@ -46,7 +46,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-from repro.core.codegen import EW_OPS, eval_node
+from repro.core.codegen import EW_OPS, canonical_dtype, eval_node
 from repro.core.ir import Graph, OpKind, OpNode
 from repro.core.pattern import FusionPattern
 from repro.core.templates import Template
@@ -71,6 +71,7 @@ class StitchAnalysis:
     roles: dict[str, str]                   # node -> ROW | INV | ACC
     acc_init: dict[str, tuple[str, float]]  # acc node -> (combine, init value)
     feasible_blocks: list[int]              # row-block sizes that divide R
+    single_block: bool = False              # an ACC feeds members (grid must be 1)
 
 
 def _role_of_input(node: OpNode, rows: int) -> str:
@@ -141,6 +142,7 @@ def _analyze_with_rows(p: FusionPattern, rows: int,
         roles[name] = INV if name in force_inv else _role_of_input(g[name], rows)
 
     topo_members = [n.name for n in p.nodes if not n.is_source()]
+    single_block = False
     for name in topo_members:
         node = g[name]
         ops = node.operands
@@ -149,13 +151,48 @@ def _analyze_with_rows(p: FusionPattern, rows: int,
             # operand outside pattern and not an external input -> impossible
             raise StitchInfeasible(f"unrooted operand of {name}")
         if any(r == ACC for r in op_roles):
-            raise StitchInfeasible(f"{name} consumes accumulator (layout constraint)")
+            # §5.3 layout constraint: an accumulator's value only exists once
+            # the whole row space has been visited, so a member may consume it
+            # only when the entire row space is one block (grid == 1) — then
+            # the fully-reduced value is live in the body and behaves like a
+            # row-invariant operand.
+            single_block = True
+            op_roles = [INV if r == ACC else r for r in op_roles]
 
         k = node.kind
         if k is OpKind.ELEMENTWISE:
+            # a ROW operand arrives as an (rb, ...) block; any other operand
+            # spanning the full row space cannot be combined with it
+            # value-to-value (it would need per-block slicing)
+            if ROW in op_roles:
+                for o, r in zip(ops, op_roles):
+                    oshape = g[o].shape
+                    if (r == INV and oshape and oshape[0] == rows
+                            and roles.get(o) != ACC):
+                        raise StitchInfeasible(
+                            f"{name} mixes a row block with full-rows operand {o}")
             roles[name] = ROW if ROW in op_roles else INV
         elif k is OpKind.BROADCAST:
-            roles[name] = ROW if (node.shape and node.shape[0] == rows) else INV
+            dims = tuple(node.attrs.get("bcast_dims", ()))
+            src_shape = g[ops[0]].shape
+            if op_roles[0] == ROW:
+                # the operand's row axis (its dim 0) must land on the target's
+                # leading axis, and the target must keep the row extent
+                if (dims and dims[0] == 0 and node.shape
+                        and node.shape[0] == rows):
+                    roles[name] = ROW
+                else:
+                    raise StitchInfeasible(
+                        f"broadcast {name} moves a row-blocked operand off the row axis")
+            elif node.shape and node.shape[0] == rows:
+                # target spans rows; sound only if no operand dim carrying
+                # real extent maps onto the row axis (pure replication)
+                if dims and dims[0] == 0 and src_shape and src_shape[0] != 1:
+                    raise StitchInfeasible(
+                        f"broadcast {name} needs per-block rows of invariant {ops[0]}")
+                roles[name] = ROW
+            else:
+                roles[name] = INV
         elif k is OpKind.RESHAPE:
             src = g[ops[0]]
             if roles[ops[0]] == ROW:
@@ -226,20 +263,12 @@ def _analyze_with_rows(p: FusionPattern, rows: int,
         else:
             raise StitchInfeasible(f"unsupported kind {k} in stitched kernel")
 
-    # ACC nodes consumed internally -> only legal with grid == 1.
-    needs_single_block = False
-    for name, role in roles.items():
-        if role == ACC and name in p.members:
-            internal_users = [u for u in g.users(name) if u in p.members]
-            if internal_users:
-                needs_single_block = True
-
     blocks = [b for b in (8, 16, 32, 64, 128, 256, 512, rows) if b <= rows and rows % b == 0]
-    if needs_single_block:
+    if single_block:
         blocks = [rows]
     if not blocks:
         blocks = [rows]
-    return StitchAnalysis(rows, roles, acc_init, sorted(set(blocks)))
+    return StitchAnalysis(rows, roles, acc_init, sorted(set(blocks)), single_block)
 
 
 def _block_shape(shape: tuple[int, ...], role: str, rb: int) -> tuple[int, ...]:
@@ -327,7 +356,7 @@ def build_stitched_callable(
             out_specs.append(pl.BlockSpec(bs, lambda i, _n=len(bs): (i,) + (0,) * (_n - 1)))
         else:  # INV or ACC: full tensor every step
             out_specs.append(pl.BlockSpec(shp, lambda i, _n=len(shp): (0,) * _n))
-        out_shapes.append(jax.ShapeDtypeStruct(shp, jnp.dtype(node.dtype)))
+        out_shapes.append(jax.ShapeDtypeStruct(shp, canonical_dtype(node.dtype)))
 
     scratch_shapes = []
     scratch_order = sorted(scratch_set)
@@ -337,9 +366,9 @@ def build_stitched_callable(
         # VMEM scratch for TPU; plain ANY in interpret mode still allocates
         try:
             from jax.experimental.pallas import tpu as pltpu
-            scratch_shapes.append(pltpu.VMEM(bs, jnp.dtype(node.dtype)))
+            scratch_shapes.append(pltpu.VMEM(bs, canonical_dtype(node.dtype)))
         except Exception:  # pragma: no cover - pltpu always importable in jax>=0.4
-            scratch_shapes.append(jax.ShapeDtypeStruct(bs, jnp.dtype(node.dtype)))
+            scratch_shapes.append(jax.ShapeDtypeStruct(bs, canonical_dtype(node.dtype)))
 
     n_in, n_out = len(ins), len(outs)
 
@@ -364,13 +393,17 @@ def build_stitched_callable(
             if role == ACC:
                 # partial contribution of this row block
                 partial_val = eval_node(node, vals)
-                oix = outs.index(name)
                 combine, init = ana.acc_init[name]
-                oref = out_refs[oix]
                 if grid == 1:
-                    oref[...] = partial_val.reshape(oref.shape)
+                    # fully reduced in one step: the value is live in the body
+                    # and may feed other members (block composition, §5.3)
                     env[name] = partial_val
+                    if name in outs:
+                        oref = out_refs[outs.index(name)]
+                        oref[...] = partial_val.reshape(oref.shape)
                 else:
+                    oref = out_refs[outs.index(name)]
+
                     @pl.when(pid == 0)
                     def _init(oref=oref, init=init):
                         oref[...] = jnp.full(oref.shape, init, oref.dtype)
@@ -391,7 +424,7 @@ def build_stitched_callable(
 
         for name, oref in zip(outs, out_refs):
             if roles[name] == ACC:
-                continue  # already written
+                continue  # written by the accumulator path above
             val = env[name]
             oref[...] = val.reshape(oref.shape)
 
@@ -408,7 +441,9 @@ def build_stitched_callable(
     def run(*inputs):
         prepared = []
         for name, x in zip(ins, inputs):
-            x = jnp.asarray(x, dtype=g[name].dtype)
+            # canonicalized: the graph dtype stays authoritative without ever
+            # requesting an x64 width this runtime doesn't provide
+            x = jnp.asarray(x, dtype=canonical_dtype(g[name].dtype))
             if not g[name].shape:
                 x = x.reshape(1)
             prepared.append(x)

@@ -7,6 +7,12 @@ On this container that is CPU execution of the reduced config (the e2e
 example trains a ~100M-param model); on a TPU slice the same driver runs
 the full config over :func:`make_production_mesh` — everything between the
 CLI and the hardware is mesh-shape agnostic.
+
+``--stitch [--cache-dir DIR]`` routes the step through the FusionStitching
+pipeline (:class:`repro.train.StitchedTrainStep`): the backward pass traces
+to StitchIR, the AdamW+clip update runs as one packed multi-tensor kernel,
+and each step polls the cache so the run upgrades from the instant XLA
+fallback to stitched plans as background compiles land.
 """
 
 from __future__ import annotations
@@ -45,6 +51,14 @@ def main():
                     help="override width (e.g. to hit ~100M params)")
     ap.add_argument("--n-layers", type=int, default=None)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--stitch", action="store_true",
+                    help="run the step through the FusionStitching pipeline "
+                         "(backward pass traced to StitchIR + packed AdamW "
+                         "kernel), upgrading from the XLA fallback as "
+                         "background compiles land")
+    ap.add_argument("--cache-dir", default=None,
+                    help="StitchCache directory (fusion plans persist and "
+                         "replay across runs)")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -74,12 +88,25 @@ def main():
     state = jax.device_put(state, state_sh)
 
     data = SyntheticTokens(DataConfig(cfg.vocab, args.seq, args.batch))
-    step_raw = make_train_step(model, opt_cfg, microbatches=args.microbatches)
     bspecs = jax.tree.map(lambda s: NamedSharding(mesh, s),
                           batch_pspecs(data.batch(0), mesh),
                           is_leaf=lambda x: isinstance(x, P))
-    step_fn = jax.jit(step_raw, in_shardings=(state_sh, bspecs),
-                      donate_argnums=(0,))
+    stitched = None
+    if args.stitch:
+        # stitched training: the backward pass and packed AdamW+clip update
+        # execute through compiled StitchIR artifacts, polling the cache each
+        # step so the run upgrades from the XLA fallback mid-flight
+        from repro.cache import CompilationService, StitchCache
+        from repro.train import StitchedTrainStep
+        svc = CompilationService(cache=StitchCache(args.cache_dir))
+        stitched = StitchedTrainStep(model, opt_cfg,
+                                     microbatches=args.microbatches,
+                                     service=svc)
+        step_fn = stitched
+    else:
+        step_raw = make_train_step(model, opt_cfg, microbatches=args.microbatches)
+        step_fn = jax.jit(step_raw, in_shardings=(state_sh, bspecs),
+                          donate_argnums=(0,))
 
     def data_fn(step: int):
         return jax.device_put(data.batch(step), bspecs)
@@ -107,6 +134,18 @@ def main():
     state = sup.run(state, args.steps)
     print(f"done: {args.steps} steps in {time.time() - t0:.1f}s; "
           f"final loss {sup.metrics_log[-1]['loss']:.4f}")
+    if stitched is not None:
+        stitched.wait(timeout=60.0)
+        rep = stitched.report()
+        grad_plan = rep["grad"].get("plan") or {}
+        opt_plan = rep["optimizer"].get("plan") or {}
+        print(f"stitch: grad {rep['grad']['status']} "
+              f"({grad_plan.get('n_ops', '?')} ops -> "
+              f"{grad_plan.get('n_kernels', '?')} kernels), "
+              f"optimizer {rep['optimizer']['status']} "
+              f"({opt_plan.get('n_ops', '?')} ops -> "
+              f"{opt_plan.get('n_kernels', '?')} packed kernel(s)), "
+              f"fallback_steps={rep['fallback_steps']}")
 
 
 if __name__ == "__main__":

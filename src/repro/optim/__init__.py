@@ -1,2 +1,3 @@
-from . import adamw, compress
+from . import adamw, compress, packed
 from .adamw import AdamWConfig, AdamWState
+from .packed import PackedAdamW, PackedLayout, make_layout, pack_tree, unpack_tree

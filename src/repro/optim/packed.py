@@ -1,0 +1,266 @@
+"""Packed multi-tensor AdamW — the paper's "fusion without data dependences"
+applied to the optimizer phase of training.
+
+A plain AdamW step dispatches O(leaves) elementwise kernels per parameter
+tensor (m, v, update, decay, cast — every one memory-bound), plus a
+global-norm reduction tree.  FusionStitching's headline capability is
+packing *independent* ops into one kernel so their loops share a launch
+(§4.2, kernel packing); the per-tensor update chains are exactly such a set:
+after the shared clip scale is known they have no data dependences between
+them.
+
+Mechanism
+---------
+* :func:`make_layout` flattens the params pytree: each leaf is padded to a
+  multiple of ``rows`` and viewed as a ``(rows, cols_i)`` float32 panel, so
+  every per-tensor chain shares the one row space a stitched kernel's grid
+  iterates over (leaves only differ in their minor dimension, which the
+  row-parallel emitter allows per member).
+* :func:`packed_update_fn` spells the whole AdamW+global-norm-clip update
+  over the packed panels with exactly :mod:`repro.optim.adamw`'s formulas —
+  the per-leaf sum-of-squares reductions are cross-row accumulators feeding
+  the shared clip scale, which is the emitter's grid==1 block-composition
+  path (§5.3 layout constraint).
+* :class:`PackedAdamW` traces that function through
+  :func:`repro.core.trace.trace_to_graph` and compiles it with the stitch
+  pipeline.  The substitution search collapses the entire update into ONE
+  fusion pattern (there are no partition ops), so the compiled artifact is a
+  single packed Pallas kernel covering clip + m/v moments + decay + step for
+  every tensor.  With a :class:`repro.cache.CompilationService` the compile
+  is miss-then-upgrade: step 0 runs the XLA-mode fallback artifact (same
+  numerics), later steps replay the cached packed plan.
+
+Scheduling scalars (lr, bias corrections) are computed outside the kernel —
+they are O(1) flops on the step counter; the kernel takes them as scalar
+operands so one compiled artifact serves every step.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compiler import CompiledGraph, StitchCompiler
+from repro.core.ir import Graph
+from repro.core.trace import trace_to_graph
+
+from . import adamw
+
+__all__ = ["PackedLayout", "make_layout", "pack_tree", "unpack_tree",
+           "packed_update_fn", "PackedAdamW"]
+
+
+DEFAULT_ROWS = 8   # one TPU sublane group; every leaf pads to a multiple
+
+
+@dataclass(frozen=True)
+class PackedLayout:
+    """How a params pytree maps onto shared-row float32 panels."""
+    rows: int
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]   # original leaf shapes
+    dtypes: tuple[str, ...]               # original leaf dtypes
+    cols: tuple[int, ...]                 # minor dim of each packed panel
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.shapes)
+
+    def panel_shape(self, i: int) -> tuple[int, int]:
+        return (self.rows, self.cols[i])
+
+
+def make_layout(tree, rows: int = DEFAULT_ROWS) -> PackedLayout:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes, dtypes, cols = [], [], []
+    for leaf in leaves:
+        n = int(math.prod(leaf.shape)) if leaf.shape else 1
+        padded = n + (-n) % rows
+        shapes.append(tuple(leaf.shape))
+        dtypes.append(str(leaf.dtype))
+        cols.append(padded // rows)
+    return PackedLayout(rows, treedef, tuple(shapes), tuple(dtypes), tuple(cols))
+
+
+def _pack_leaf(leaf, rows: int, cols: int):
+    flat = jnp.ravel(leaf).astype(jnp.float32)
+    pad = rows * cols - flat.shape[0]
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    return flat.reshape(rows, cols)
+
+
+def pack_tree(layout: PackedLayout, tree) -> list[jax.Array]:
+    """Pytree -> list of zero-padded (rows, cols_i) float32 panels."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if len(leaves) != layout.n_leaves:
+        raise ValueError(f"tree has {len(leaves)} leaves, layout expects "
+                         f"{layout.n_leaves}")
+    return [_pack_leaf(l, layout.rows, c) for l, c in zip(leaves, layout.cols)]
+
+
+def unpack_tree(layout: PackedLayout, panels, dtypes=None):
+    """Inverse of :func:`pack_tree`; casts each leaf back to its dtype
+    (``dtypes=None``) or to an explicit per-leaf dtype list (e.g. float32
+    for optimizer moments)."""
+    leaves = []
+    for i, panel in enumerate(panels):
+        shape = layout.shapes[i]
+        n = int(math.prod(shape)) if shape else 1
+        dt = layout.dtypes[i] if dtypes is None else dtypes[i]
+        leaves.append(panel.reshape(-1)[:n].reshape(shape).astype(dt))
+    return jax.tree_util.tree_unflatten(layout.treedef, leaves)
+
+
+def packed_update_fn(cfg: adamw.AdamWConfig) -> Callable:
+    """The update over packed panels, formula-for-formula equal to
+    :func:`repro.optim.adamw.update` (zero padding is a fixed point of the
+    update: g=0, p=0 stay 0, so panels never leak across steps)."""
+
+    def update(ps, gs, ms, vs, lr, b1c, b2c):
+        ssq = None
+        for g in gs:                       # leaf order == reference leaf order
+            s = jnp.sum(jnp.square(g))
+            ssq = s if ssq is None else ssq + s
+        norm = jnp.sqrt(ssq)
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(norm, 1e-12))
+        new_p, new_m, new_v = [], [], []
+        for p, g, m, v in zip(ps, gs, ms, vs):
+            gc = g * scale
+            nm = cfg.b1 * m + (1 - cfg.b1) * gc
+            nv = cfg.b2 * v + (1 - cfg.b2) * gc * gc
+            upd = (nm / b1c) / (jnp.sqrt(nv / b2c) + cfg.eps)
+            upd = upd + cfg.weight_decay * p
+            new_p.append(p - lr * upd)
+            new_m.append(nm)
+            new_v.append(nv)
+        return new_p, new_m, new_v, norm
+
+    return update
+
+
+class PackedAdamW:
+    """Compiled packed-update frontend with the reference module's API.
+
+    ``update(grads, state, params)`` matches :func:`repro.optim.adamw.update`
+    (minus the leading cfg).  Three execution paths:
+
+    * ``service=None`` — blocking stitch compile at construction (offline).
+    * with a :class:`~repro.cache.CompilationService` — miss-then-upgrade:
+      the first step runs the XLA-mode fallback artifact, and every
+      ``update`` polls the cache so the packed single-kernel plan takes over
+      as soon as the background compile lands.
+    * ``use_compiler=False`` — pure-jnp execution of the packed function
+      (debug / property tests without the compile cost).
+    """
+
+    def __init__(self, cfg: adamw.AdamWConfig, params,
+                 rows: int = DEFAULT_ROWS, service=None,
+                 compiler: StitchCompiler | None = None,
+                 use_compiler: bool = True):
+        self.cfg = cfg
+        self.layout = make_layout(params, rows=rows)
+        self.service = service
+        self.status: str | None = None
+        self._fn = packed_update_fn(cfg)
+        # panelization is pure pad/reshape/cast glue; jitted it is two
+        # compiled calls per step instead of O(leaves) host-driven dispatches
+        # bracketing the packed kernel
+        lay = self.layout
+        self._pack4 = jax.jit(lambda p, g, m, v: (
+            pack_tree(lay, p), pack_tree(lay, g),
+            pack_tree(lay, m), pack_tree(lay, v)))
+        f32_leaves = ["float32"] * lay.n_leaves
+        self._unpack3 = jax.jit(lambda p, m, v, _dt=tuple(f32_leaves): (
+            unpack_tree(lay, p),
+            unpack_tree(lay, m, _dt), unpack_tree(lay, v, _dt)))
+        f32 = jnp.float32
+        example = tuple(
+            [jnp.zeros(self.layout.panel_shape(i), f32)
+             for i in range(self.layout.n_leaves)]
+            for _ in range(4)
+        ) + (jnp.zeros((), f32),) * 3
+        self._example = example
+        self.graph: Graph | None = None
+        self._names: list[str] | None = None
+        self._out_tree = None
+        self._compiled: CompiledGraph | None = None
+        self._sig = None
+        self._lookup_compiler = None
+        if not use_compiler:
+            self.status = "jnp"
+            return
+        self.graph, self._names = trace_to_graph(
+            self._fn, *example, name="packed_adamw")
+        self._out_tree = jax.tree_util.tree_structure(
+            jax.eval_shape(self._fn, *example))
+        if service is not None:
+            from repro.cache.signature import compute_signature
+            self._compiled, self.status = service.compile_or_fallback(self.graph)
+            self._sig = compute_signature(self.graph)
+            self._lookup_compiler = service.compiler("stitch")
+        else:
+            compiler = compiler or StitchCompiler(mode="stitch")
+            self._compiled = compiler.compile(self.graph)
+            self.status = "compiled"
+
+    # -- observability --------------------------------------------------------
+    @property
+    def kernel_count(self) -> int | None:
+        """Kernels the whole AdamW+clip update dispatches (1 when packed)."""
+        return self._compiled.stats.n_kernels if self._compiled else None
+
+    def report(self) -> dict:
+        out: dict[str, Any] = {"status": self.status,
+                               "n_leaves": self.layout.n_leaves,
+                               "rows": self.layout.rows}
+        if self._compiled is not None:
+            s = self._compiled.stats
+            out["plan"] = {"mode": s.mode, "n_kernels": s.n_kernels,
+                           "n_ops": s.n_ops, "pallas_groups": s.pallas_groups,
+                           "modeled_time": s.modeled_time,
+                           "cache_status": s.cache_status}
+        return out
+
+    # -- miss-then-upgrade polling --------------------------------------------
+    def poll_upgrade(self) -> None:
+        if self.service is None or self.status not in ("miss", "pending"):
+            return
+        hit = self.service.cache.lookup(
+            self.graph, self._lookup_compiler, sig=self._sig, count=False)
+        if hit is not None:
+            self._compiled = hit
+            self.status = "hit"
+        else:
+            self.service.ensure_compiling(self.graph, sig=self._sig)
+
+    # -- the update ------------------------------------------------------------
+    def _run(self, *args):
+        if self._compiled is None:           # pure-jnp path
+            return self._fn(*args)
+        env = dict(zip(self._names, jax.tree_util.tree_leaves(args)))
+        outs = self._compiled(env)
+        flat = [outs[o] for o in self.graph.outputs]
+        return jax.tree_util.tree_unflatten(self._out_tree, flat)
+
+    def update(self, grads, state: adamw.AdamWState, params):
+        """(new_params, new_state, metrics) — drop-in for adamw.update."""
+        self.poll_upgrade()
+        cfg = self.cfg
+        count = state.count + 1
+        lr = adamw.schedule(cfg, count)
+        cf = count.astype(jnp.float32)
+        b1c = 1 - cfg.b1 ** cf
+        b2c = 1 - cfg.b2 ** cf
+        ps, gs, ms, vs = self._pack4(params, grads, state.m, state.v)
+        new_p, new_m, new_v, gnorm = self._run(
+            ps, gs, ms, vs, jnp.asarray(lr, jnp.float32),
+            jnp.asarray(b1c, jnp.float32), jnp.asarray(b2c, jnp.float32))
+        up, um, uv = self._unpack3(new_p, new_m, new_v)
+        return (up, adamw.AdamWState(m=um, v=uv, count=count),
+                {"grad_norm": gnorm, "lr": lr})

@@ -1,1 +1,2 @@
-from .step import TrainState, init_state, make_train_step
+from .step import TrainState, init_state, make_loss_and_grad, make_train_step
+from .stitched_step import StitchedTrainStep

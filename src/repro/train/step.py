@@ -26,9 +26,11 @@ def init_state(model: Model, key) -> TrainState:
                       step=jnp.zeros((), jnp.int32))
 
 
-def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig,
-                    microbatches: int = 1) -> Callable:
-    """Returns train_step(state, batch) -> (state, metrics).
+def make_loss_and_grad(model: Model, microbatches: int = 1) -> Callable:
+    """Returns grad_phase(params, batch) -> (loss, aux, grads) — the
+    ``jax.value_and_grad``-built backward phase of a train step, shared by
+    the jitted step below and the stitched step
+    (:mod:`repro.train.stitched_step`), which traces it to StitchIR.
 
     ``microbatches > 1`` splits the per-step batch on the leading axis and
     accumulates grads sequentially (same math, 1/microbatches the activation
@@ -60,11 +62,16 @@ def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig,
         grads = jax.tree.map(lambda g: g / microbatches, grads)
         return loss_sum / microbatches, {}, grads
 
+    return accumulated if microbatches > 1 else single
+
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig,
+                    microbatches: int = 1) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    grad_phase = make_loss_and_grad(model, microbatches)
+
     def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
-        if microbatches > 1:
-            loss, aux, grads = accumulated(state.params, batch)
-        else:
-            loss, aux, grads = single(state.params, batch)
+        loss, aux, grads = grad_phase(state.params, batch)
         new_params, new_opt, opt_metrics = adamw.update(
             opt_cfg, grads, state.opt, state.params)
         metrics = {"loss": loss, "step": state.step + 1, **opt_metrics, **aux}

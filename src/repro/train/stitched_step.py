@@ -1,0 +1,184 @@
+"""Stitched training step — the fusion pipeline applied to the backward pass
+and the optimizer phase.
+
+Training is the paper's canonical memory-intensive workload: the backward
+pass of norms/softmax/cross-entropy and the AdamW+clip update are pure
+elementwise+reduction traffic over every parameter.  This module routes both
+phases of :func:`repro.train.step.make_train_step` through the stitch
+compiler:
+
+* **Backward phase** — the ``jax.value_and_grad``-built loss+grad function
+  (:func:`~repro.train.step.make_loss_and_grad`, including microbatch
+  accumulation) is traced to StitchIR with
+  :func:`~repro.core.trace.trace_to_graph`.  Backward-only primitives are
+  covered first-class where the IR has a kind (scatter-add from embedding
+  gradients, ``add_any`` grad accumulation, trig from RoPE) and fall back to
+  executable CUSTOM nodes otherwise (``scan`` bodies, iota) — those
+  partition fusion exactly like the paper's opaque ops but keep the graph
+  runnable end-to-end.
+* **Optimizer phase** — the params pytree is flattened into shared-row
+  panels and the whole AdamW+global-norm-clip update becomes ONE packed
+  kernel (:class:`repro.optim.packed.PackedAdamW`): independent per-tensor
+  update chains sharing a single kernel's grid, the paper's "fusion without
+  data dependences".
+
+Both graphs compile through :class:`repro.cache.CompilationService`
+miss-then-upgrade: step 0 executes the instantly-available XLA-mode
+fallback artifact (identical numerics), the full stitch pipeline runs on a
+background thread, and every later step polls the cache so the run upgrades
+to stitched plans mid-flight — mirroring the serving engine's behavior.
+
+If tracing or compilation fails outright the step degrades to the plain
+jitted reference (status ``"error"``); a per-call shape drift (e.g. a
+last-partial batch) falls back to the jitted step for that call only.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.optim import adamw
+from repro.optim.packed import PackedAdamW
+
+from .step import TrainState, make_loss_and_grad, make_train_step
+
+
+def _avals(tree) -> tuple:
+    return tuple(
+        (getattr(x, "shape", ()), str(getattr(x, "dtype", type(x).__name__)))
+        for x in jax.tree_util.tree_leaves(tree))
+
+
+class _TracedPhase:
+    """One traced-and-compiled function with miss-then-upgrade polling."""
+
+    def __init__(self, fn, example_args, service, name: str):
+        from repro.cache.signature import compute_signature
+        from repro.core.trace import trace_to_graph
+
+        self.status = "error"
+        self.graph = None
+        self.compiled = None
+        try:
+            self.graph, self.names = trace_to_graph(fn, *example_args, name=name)
+            self.out_tree = jax.tree_util.tree_structure(
+                jax.eval_shape(fn, *example_args))
+            if self.out_tree.num_leaves != len(self.graph.outputs):
+                return                       # duplicated outputs: not executable
+            self.compiled, self.status = service.compile_or_fallback(self.graph)
+            self.sig = compute_signature(self.graph)
+            self.compiler = service.compiler("stitch")
+            self.service = service
+            self.in_avals = _avals(example_args)
+        except Exception:
+            self.graph = None
+            self.compiled = None
+
+    @property
+    def ok(self) -> bool:
+        return self.compiled is not None
+
+    def eligible(self, args) -> bool:
+        return self.ok and _avals(args) == self.in_avals
+
+    def poll_upgrade(self) -> None:
+        if not self.ok or self.status not in ("miss", "pending"):
+            return
+        hit = self.service.cache.lookup(self.graph, self.compiler,
+                                        sig=self.sig, count=False)
+        if hit is not None:
+            self.compiled = hit
+            self.status = "hit"
+        else:
+            # re-kick if the background compile was deferred (worker cap) or
+            # died — a training run must not serve the fallback forever
+            self.service.ensure_compiling(self.graph, sig=self.sig)
+
+    def run(self, *args):
+        env = dict(zip(self.names, jax.tree_util.tree_leaves(args)))
+        outs = self.compiled(env)
+        flat = [outs[o] for o in self.graph.outputs]
+        return jax.tree_util.tree_unflatten(self.out_tree, flat)
+
+    def plan_stats(self) -> dict | None:
+        if self.compiled is None:
+            return None
+        s = self.compiled.stats
+        return {"mode": s.mode, "n_kernels": s.n_kernels, "n_ops": s.n_ops,
+                "pallas_groups": s.pallas_groups, "modeled_time": s.modeled_time,
+                "cache_status": s.cache_status}
+
+
+class StitchedTrainStep:
+    """Drop-in for :func:`make_train_step`'s returned callable:
+    ``step(state, batch) -> (state, metrics)`` with identical numerics, the
+    backward pass and the packed optimizer executing through stitched
+    artifacts (upgrading from the XLA fallback as background compiles land).
+    """
+
+    def __init__(self, model: Model, opt_cfg: adamw.AdamWConfig,
+                 microbatches: int = 1, service=None,
+                 rows: int = 8):
+        if service is None:
+            from repro.cache import CompilationService
+            service = CompilationService()
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.microbatches = microbatches
+        self.service = service
+        self.rows = rows
+        self._grad_fn = make_loss_and_grad(model, microbatches)
+        # reference step: full-jit fallback for trace failures / shape drift
+        self._jit_step = jax.jit(make_train_step(model, opt_cfg, microbatches))
+        self._grad: _TracedPhase | None = None
+        self._packed: PackedAdamW | None = None
+        self.fallback_steps = 0              # calls served by the jitted step
+
+    # -- lazy preparation ------------------------------------------------------
+    def _prepare(self, state: TrainState, batch) -> None:
+        self._grad = _TracedPhase(self._grad_fn, (state.params, batch),
+                                  self.service, name="train_grad")
+        try:
+            self._packed = PackedAdamW(self.opt_cfg, state.params,
+                                       rows=self.rows, service=self.service)
+        except Exception:
+            self._packed = None
+
+    # -- observability --------------------------------------------------------
+    def report(self) -> dict:
+        out: dict[str, Any] = {
+            "grad": {"status": self._grad.status if self._grad else None},
+            "optimizer": self._packed.report() if self._packed else {"status": None},
+            "fallback_steps": self.fallback_steps,
+        }
+        if self._grad is not None and self._grad.plan_stats() is not None:
+            out["grad"]["plan"] = self._grad.plan_stats()
+        if self.service is not None:
+            out["cache"] = self.service.cache.report()
+            out["service_error"] = self.service.last_error
+        return out
+
+    # -- the step --------------------------------------------------------------
+    def __call__(self, state: TrainState, batch) -> tuple[TrainState, dict]:
+        if self._grad is None:
+            self._prepare(state, batch)
+        grad_ok = self._grad.eligible((state.params, batch))
+        if not grad_ok or self._packed is None:
+            self.fallback_steps += 1
+            return self._jit_step(state, batch)
+        self._grad.poll_upgrade()
+        loss, aux, grads = self._grad.run(state.params, batch)
+        new_params, new_opt, opt_metrics = self._packed.update(
+            grads, state.opt, state.params)
+        metrics = {"loss": loss, "step": state.step + 1, **opt_metrics, **aux}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    # -- orderly shutdown ------------------------------------------------------
+    def wait(self, timeout: float | None = None) -> None:
+        """Join in-flight background compiles (tests / clean exit)."""
+        self.service.wait(timeout)

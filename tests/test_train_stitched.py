@@ -1,0 +1,288 @@
+"""Stitched training: traced backward + packed AdamW vs the jitted reference.
+
+The contract under test: ``StitchedTrainStep`` is a drop-in for the jitted
+``make_train_step`` callable — same params, opt state, loss, and grad-norm
+metric over multiple steps — while executing the backward pass and the
+packed multi-tensor optimizer through compiled StitchIR artifacts, including
+the miss-then-upgrade transition from the XLA fallback mid-run.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache import CompilationService, StitchCache
+from repro.configs import get_reduced
+from repro.models import build_model
+from repro.optim import AdamWConfig, PackedAdamW, adamw, make_layout, pack_tree, unpack_tree
+from repro.train import StitchedTrainStep, init_state, make_train_step
+
+B, S = 2, 8
+
+
+@pytest.fixture(scope="module")
+def model():
+    return build_model(get_reduced("qwen3_1_7b"))
+
+
+@pytest.fixture(scope="module")
+def opt_cfg():
+    return AdamWConfig(warmup_steps=2, total_steps=20)
+
+
+def make_batch(vocab, i, batch=B, seq=S):
+    r = np.random.default_rng(100 + i)
+    return {"tokens": jnp.asarray(r.integers(0, vocab, (batch, seq)), jnp.int32),
+            "labels": jnp.asarray(r.integers(0, vocab, (batch, seq)), jnp.int32)}
+
+
+def assert_state_close(a, b, rtol=2e-5, atol=2e-6):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(
+            np.asarray(x, np.float32), np.asarray(y, np.float32),
+            rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# the headline contract: identical training trajectory, upgrade mid-run
+# ---------------------------------------------------------------------------
+
+def test_stitched_step_matches_jit_with_upgrade_mid_run(model, opt_cfg):
+    """3+ steps of numerically identical training, with the stitched plans
+    landing *between* steps (deterministic miss-then-upgrade): steps 0-1 run
+    on the instantly-available XLA fallback artifacts, the stitch pipeline
+    is then forced synchronously, and steps 2+ run on the upgraded packed
+    plans.  The trajectory must be seamless throughout."""
+    vocab = model.cfg.vocab
+    ref_step = jax.jit(make_train_step(model, opt_cfg))
+    # max_background=0: the service never spawns the background compile, so
+    # the upgrade point is under test control instead of thread timing
+    svc = CompilationService(max_background=0)
+    st_step = StitchedTrainStep(model, opt_cfg, service=svc)
+
+    s_ref = init_state(model, jax.random.PRNGKey(0))
+    s_st = init_state(model, jax.random.PRNGKey(0))
+
+    for i in range(2):                                  # fallback phase
+        s_st, m_st = st_step(s_st, make_batch(vocab, i))
+        s_ref, m_ref = ref_step(s_ref, make_batch(vocab, i))
+        np.testing.assert_allclose(float(m_st["loss"]), float(m_ref["loss"]),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(float(m_st["grad_norm"]),
+                                   float(m_ref["grad_norm"]), rtol=1e-4)
+    assert st_step._grad.status in ("miss", "pending")
+    assert st_step._packed.status in ("miss", "pending")
+    assert st_step._grad.compiled.stats.mode == "xla"   # fallback artifact
+
+    # land the stitched plans in the cache (what the background thread does)
+    stitch = svc.compiler("stitch")
+    stitch.compile(st_step._grad.graph, bypass_cache_lookup=True)
+    stitch.compile(st_step._packed.graph, bypass_cache_lookup=True)
+
+    for i in range(2, 4):                               # upgraded phase
+        s_st, m_st = st_step(s_st, make_batch(vocab, i))
+        s_ref, m_ref = ref_step(s_ref, make_batch(vocab, i))
+        np.testing.assert_allclose(float(m_st["loss"]), float(m_ref["loss"]),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(float(m_st["grad_norm"]),
+                                   float(m_ref["grad_norm"]), rtol=1e-4)
+    assert st_step._grad.status == "hit"
+    assert st_step._packed.status == "hit"
+    assert st_step._grad.compiled.stats.mode == "stitch"
+    assert st_step.fallback_steps == 0
+
+    assert int(s_st.step) == int(s_ref.step) == 4
+    assert int(s_st.opt.count) == int(s_ref.opt.count) == 4
+    assert_state_close(s_st.params, s_ref.params)
+    assert_state_close(s_st.opt.m, s_ref.opt.m)
+    assert_state_close(s_st.opt.v, s_ref.opt.v)
+
+    # the packed optimizer plan is ONE kernel for the whole AdamW+clip update
+    assert st_step._packed.kernel_count == 1
+    # and the backward plan compresses kernels vs one-kernel-per-op
+    grad_stats = st_step._grad.compiled.stats
+    assert grad_stats.n_kernels < grad_stats.n_ops
+
+
+def test_stitched_step_microbatch_accumulation(model, opt_cfg):
+    """Gradient accumulation (scan over microbatches) traces through the
+    same pipeline — the scan stays an executable CUSTOM partition — and the
+    trajectory still matches the jitted microbatched reference."""
+    vocab = model.cfg.vocab
+    ref_step = jax.jit(make_train_step(model, opt_cfg, microbatches=2))
+    st_step = StitchedTrainStep(model, opt_cfg, microbatches=2,
+                                service=CompilationService(max_background=0))
+
+    s_ref = init_state(model, jax.random.PRNGKey(1))
+    s_st = init_state(model, jax.random.PRNGKey(1))
+    for i in range(3):
+        batch = make_batch(vocab, 20 + i, batch=4)
+        s_st, m_st = st_step(s_st, batch)
+        s_ref, m_ref = ref_step(s_ref, batch)
+        np.testing.assert_allclose(float(m_st["loss"]), float(m_ref["loss"]),
+                                   rtol=1e-5)
+    assert st_step.fallback_steps == 0
+    assert_state_close(s_st.params, s_ref.params)
+    assert_state_close(s_st.opt.m, s_ref.opt.m)
+
+
+def test_stitched_step_shape_drift_falls_back(model, opt_cfg):
+    """A batch whose shapes differ from the traced avals (e.g. a last
+    partial batch) is served by the jitted reference for that call only."""
+    vocab = model.cfg.vocab
+    st_step = StitchedTrainStep(model, opt_cfg,
+                                service=CompilationService(max_background=0))
+    s = init_state(model, jax.random.PRNGKey(2))
+    s, _ = st_step(s, make_batch(vocab, 0))
+    assert st_step.fallback_steps == 0
+    s, m = st_step(s, make_batch(vocab, 1, seq=S // 2))   # drifted shape
+    assert st_step.fallback_steps == 1
+    assert np.isfinite(float(m["loss"]))
+    s, _ = st_step(s, make_batch(vocab, 2))               # original shape again
+    assert st_step.fallback_steps == 1
+    assert int(s.step) == 3
+
+
+# ---------------------------------------------------------------------------
+# packed multi-tensor AdamW
+# ---------------------------------------------------------------------------
+
+def test_packed_update_is_single_kernel_and_exact():
+    """The compiled packed update covers the whole AdamW+clip update with
+    ONE kernel (kernel packing: independent per-tensor chains share the
+    grid; the global-norm accumulators feed the clip scale via grid==1
+    block composition) and reproduces the per-tensor reference exactly."""
+    cfg = AdamWConfig()
+    rng = np.random.default_rng(0)
+    shapes = [(6, 17), (64,), (3, 4, 5), (), (40, 16)]
+    params = {f"p{i}": jnp.asarray(rng.standard_normal(s), jnp.float32)
+              for i, s in enumerate(shapes)}
+    grads = {f"p{i}": jnp.asarray(rng.standard_normal(s), jnp.float32)
+             for i, s in enumerate(shapes)}
+    state = adamw.init(params)
+
+    pa = PackedAdamW(cfg, params)
+    assert pa.kernel_count == 1
+    assert pa._compiled.stats.pallas_groups == 1
+    assert pa._compiled.stats.n_ops > 50      # the packing is real
+
+    new_p, new_s, metrics = pa.update(grads, state, params)
+    ref_p, ref_s, ref_m = adamw.update(cfg, grads, state, params)
+    assert_state_close(new_p, ref_p, rtol=1e-6, atol=1e-7)
+    assert_state_close(new_s.m, ref_s.m, rtol=1e-6, atol=1e-7)
+    assert_state_close(new_s.v, ref_s.v, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(float(metrics["grad_norm"]),
+                               float(ref_m["grad_norm"]), rtol=1e-5)
+    assert int(new_s.count) == 1
+
+    # second step: state threads through pack/unpack without drift
+    new_p2, new_s2, _ = pa.update(grads, new_s, new_p)
+    ref_p2, ref_s2, _ = adamw.update(cfg, grads, ref_s, ref_p)
+    assert_state_close(new_p2, ref_p2, rtol=1e-6, atol=1e-7)
+    assert int(new_s2.count) == int(ref_s2.count) == 2
+
+
+def test_pack_unpack_roundtrip_mixed_dtypes():
+    rng = np.random.default_rng(3)
+    tree = {
+        "a": jnp.asarray(rng.standard_normal((5, 7)), jnp.float32),
+        "b": jnp.asarray(rng.standard_normal((13,)), jnp.bfloat16),
+        "c": jnp.asarray(rng.standard_normal(()), jnp.float32),
+    }
+    layout = make_layout(tree, rows=8)
+    panels = pack_tree(layout, tree)
+    for i, p in enumerate(panels):
+        assert p.shape == layout.panel_shape(i)
+        assert p.shape[0] == 8 and p.dtype == jnp.float32
+    back = unpack_tree(layout, panels)
+    for k in tree:
+        assert back[k].dtype == tree[k].dtype
+        np.testing.assert_allclose(np.asarray(back[k], np.float32),
+                                   np.asarray(tree[k], np.float32),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_packed_update_with_disk_cache_service(tmp_path):
+    """PackedAdamW through a CompilationService with a disk-backed cache:
+    a second instance replays the packed plan (cache hit) instead of
+    re-running the stitch pipeline."""
+    cfg = AdamWConfig()
+    params = {"w": jnp.ones((8, 4), jnp.float32), "b": jnp.ones((4,), jnp.float32)}
+    grads = {"w": jnp.full((8, 4), 0.5, jnp.float32),
+             "b": jnp.full((4,), 0.5, jnp.float32)}
+    state = adamw.init(params)
+
+    svc = CompilationService(cache=StitchCache(str(tmp_path)))
+    pa = PackedAdamW(cfg, params, service=svc)
+    assert pa.status in ("miss", "pending", "hit")
+    out1 = pa.update(grads, state, params)
+    svc.wait(60.0)
+    pa.poll_upgrade()
+    assert pa.status == "hit"
+    assert pa.kernel_count == 1
+    out2 = PackedAdamW(cfg, params, service=svc).update(grads, state, params)
+    assert_state_close(out1[0], out2[0], rtol=1e-6, atol=0)
+
+    ref = adamw.update(cfg, grads, state, params)
+    assert_state_close(out1[0], ref[0], rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# int64-truncation warning regression (stitched.py / codegen.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.filterwarnings("error::UserWarning")
+def test_no_x64_truncation_warning_from_stitched_execution():
+    """Graphs carrying 64-bit dtypes (traced under x64 or hand-built) must
+    execute through the stitched kernel AND the reference paths without the
+    jnp 'requested dtype int64 ... truncated' UserWarning: the graph dtype
+    is canonicalized once instead of requested per call."""
+    from repro.core import GraphBuilder, StitchCompiler, build_reference_fn
+
+    b = GraphBuilder("i64")
+    x = b.param("x", (64, 32), dtype="int64")
+    c = b.const("c", (), dtype="float64")
+    b.graph[c].attrs["value"] = np.float64(2.0)
+    y = b.ew("add", x, x)
+    z = b.ew("mul", y, y)
+    f = b.ew("convert", z, dtype="float64")
+    g = b.build(outputs=[f])
+
+    inputs = {"x": np.arange(64 * 32, dtype=np.int32).reshape(64, 32)}
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", UserWarning)
+        ref = build_reference_fn(g)(inputs)
+        compiled = StitchCompiler(mode="stitch").compile(g)
+        out = compiled(inputs)
+    np.testing.assert_allclose(np.asarray(out[f], np.float64),
+                               np.asarray(ref[f], np.float64))
+    # at least one group actually ran as a stitched Pallas kernel
+    assert compiled.stats.pallas_groups >= 1
+
+
+@pytest.mark.filterwarnings("error::UserWarning")
+def test_no_x64_truncation_warning_from_traced_float64_consts(model, opt_cfg):
+    """The original repro: tracing real model code captures np scalar consts
+    as float64/int64; compiling + executing the traced graph must not warn."""
+    from repro.core import StitchCompiler
+    from repro.core.trace import trace_to_graph
+
+    vocab = model.cfg.vocab
+    batch = make_batch(vocab, 0)
+    params = init_state(model, jax.random.PRNGKey(0)).params
+
+    def fwd(p, tokens):
+        loss, _ = model.train_forward(p, {"tokens": tokens,
+                                          "labels": batch["labels"]})
+        return loss
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", UserWarning)
+        g, names = trace_to_graph(fwd, params, batch["tokens"], name="fwd")
+        compiled = StitchCompiler(mode="stitch").compile(g)
+        env = dict(zip(names, jax.tree_util.tree_leaves((params, batch["tokens"]))))
+        out = compiled(env)
+        jax.block_until_ready(list(out.values()))
