@@ -4,22 +4,33 @@ baseline.
     PYTHONPATH=src python -m benchmarks.check_regression \
         --baseline benchmarks/baseline.json --candidate bench.json
 
-Gated metrics (deterministic modeled quantities only — wall-clock numbers
-in the record are informational and too noisy to gate):
+Metric specs are **direction-aware** — ``(json path, label, direction)``
+where direction is ``"lower"`` (kernel counts, modeled times: growth beyond
+tolerance fails), ``"higher"`` (throughputs: a drop beyond tolerance
+fails), or ``"exact"`` (structural counts that must not drift at all).
 
-* per-workload **stitched kernel count** — more kernels than baseline means
-  fusion got worse (the paper's kernel-compression win eroding);
-* per-workload **modeled stitch step time** — the cost model's end-to-end
-  estimate regressing means a slower plan shipped;
-* **training metrics** — stitched kernel count / modeled time of the traced
+Gated sections:
+
+* per-workload **stitched kernel count** and **modeled stitch step time**
+  (lower) — the paper's kernel-compression win eroding / a slower plan;
+* **training** — stitched kernel count / modeled time of the traced
   backward graph, and the packed AdamW+clip update's kernel count (1 when
-  the whole multi-tensor update shares a single packed kernel).  Wall-clock
-  step times in the record are informational only.
+  the whole multi-tensor update shares a single packed kernel);
+* **serving** — continuous- and static-mode ``tokens_per_sec`` (higher):
+  a throughput drop beyond tolerance fails, an improvement passes.  These
+  are the only *wall-clock* gated metrics: best-of-reps in the harness
+  damps within-machine jitter, and ``--serving-tolerance`` (default: the
+  global tolerance) lets CI widen just these against a baseline recorded
+  on different hardware without loosening the deterministic gates;
+* **sharding** — per-shard stitched kernel counts / modeled times of the
+  mesh-placed backward and packed-update graphs (lower), and the count of
+  distinct mesh-keyed cache entries (exact: losing a placement means two
+  meshes started sharing one plan).
 
-A candidate fails when either metric exceeds baseline by more than
-``--tolerance`` (default 10%).  Workloads present only in the candidate are
-reported as new (not gated); workloads missing from the candidate fail the
-gate — losing coverage silently is itself a regression.
+A candidate fails when a gated metric moves beyond ``--tolerance`` (default
+10%) in the bad direction.  Workloads present only in the candidate are
+reported as new (not gated); workloads or sections missing from the
+candidate fail the gate — losing coverage silently is itself a regression.
 """
 
 from __future__ import annotations
@@ -30,18 +41,35 @@ import sys
 
 TOLERANCE = 0.10
 
-# (json path inside workloads[name], label, gate?) — lower is better for all
+# (json path inside workloads[name], label, direction)
 METRICS = (
-    (("kernels", "stitch"), "stitched_kernels"),
-    (("modeled_time_s", "stitch"), "modeled_stitch_time_s"),
+    (("kernels", "stitch"), "stitched_kernels", "lower"),
+    (("modeled_time_s", "stitch"), "modeled_stitch_time_s", "lower"),
 )
 
-# json paths inside the top-level "training" section — lower is better
+# json paths inside the top-level "training" section
 TRAINING_METRICS = (
-    (("grad", "kernels", "stitch"), "grad_stitched_kernels"),
-    (("grad", "modeled_time_s", "stitch"), "grad_modeled_stitch_time_s"),
-    (("packed_update", "kernels", "stitch"), "packed_update_kernels"),
-    (("packed_update", "modeled_time_s", "stitch"), "packed_update_modeled_time_s"),
+    (("grad", "kernels", "stitch"), "grad_stitched_kernels", "lower"),
+    (("grad", "modeled_time_s", "stitch"), "grad_modeled_stitch_time_s", "lower"),
+    (("packed_update", "kernels", "stitch"), "packed_update_kernels", "lower"),
+    (("packed_update", "modeled_time_s", "stitch"),
+     "packed_update_modeled_time_s", "lower"),
+)
+
+# json paths inside the top-level "serving" section — throughputs, so a
+# DROP beyond tolerance is the regression
+SERVING_METRICS = (
+    (("continuous", "tokens_per_sec"), "continuous_tokens_per_sec", "higher"),
+    (("static", "tokens_per_sec"), "static_tokens_per_sec", "higher"),
+)
+
+# json paths inside the top-level "sharding" section
+SHARDING_METRICS = (
+    (("grad_local", "kernels", "stitch"), "grad_local_stitched_kernels", "lower"),
+    (("grad_local", "modeled_time_s", "stitch"),
+     "grad_local_modeled_stitch_time_s", "lower"),
+    (("packed_local", "kernels", "stitch"), "packed_local_kernels", "lower"),
+    (("cache", "mesh_keyed_entries"), "mesh_keyed_entries", "exact"),
 )
 
 
@@ -53,9 +81,53 @@ def _get(d: dict, path) -> float | None:
     return d
 
 
-def compare(baseline: dict, candidate: dict, tolerance: float = TOLERANCE):
+def _gate_metric(b, c, label, direction, tolerance, failures, lines,
+                 row_name):
+    """One direction-aware comparison; appends to failures/lines."""
+    if b is None or c is None:
+        failures.append(f"{row_name}.{label}: metric missing "
+                        f"(baseline={b}, candidate={c})")
+        return
+    ratio = c / b if b else float("inf") if c else 1.0
+    verdict = "OK"
+    if direction == "lower" and ratio > 1.0 + tolerance:
+        verdict = "REGRESSION"
+        failures.append(
+            f"{row_name}.{label}: {b:g} -> {c:g} "
+            f"(+{100 * (ratio - 1):.1f}% > {100 * tolerance:.0f}%)")
+    elif direction == "higher" and ratio < 1.0 - tolerance:
+        verdict = "REGRESSION"
+        failures.append(
+            f"{row_name}.{label}: {b:g} -> {c:g} "
+            f"(-{100 * (1 - ratio):.1f}% drop > {100 * tolerance:.0f}%)")
+    elif direction == "exact" and c != b:
+        verdict = "REGRESSION"
+        failures.append(f"{row_name}.{label}: {b:g} -> {c:g} "
+                        f"(must match exactly)")
+    lines.append(f"{row_name},{label},{b:g},{c:g},{ratio:.3f},{verdict}")
+
+
+def _gate_section(baseline: dict, candidate: dict, section: str, specs,
+                  tolerance, failures, lines) -> None:
+    """Gate one top-level record section; a section in the baseline but not
+    the candidate is lost coverage (fails)."""
+    base = baseline.get(section)
+    if base is None:
+        return                            # baseline predates this section
+    cand = candidate.get(section)
+    if cand is None:
+        failures.append(f"{section}: section missing from candidate record")
+        return
+    for path, label, direction in specs:
+        _gate_metric(_get(base, path), _get(cand, path), label, direction,
+                     tolerance, failures, lines, section)
+
+
+def compare(baseline: dict, candidate: dict, tolerance: float = TOLERANCE,
+            serving_tolerance: float | None = None):
     """Returns (failures, lines): failure strings (empty = pass) and the
-    full per-metric report."""
+    full per-metric report.  ``serving_tolerance`` overrides ``tolerance``
+    for the wall-clock serving section only (cross-machine baselines)."""
     failures, lines = [], []
     base_wl = baseline.get("workloads", {})
     cand_wl = candidate.get("workloads", {})
@@ -63,45 +135,19 @@ def compare(baseline: dict, candidate: dict, tolerance: float = TOLERANCE):
         if name not in cand_wl:
             failures.append(f"{name}: missing from candidate record")
             continue
-        for path, label in METRICS:
-            b = _get(base_wl[name], path)
-            c = _get(cand_wl[name], path)
-            if b is None or c is None:
-                failures.append(f"{name}.{label}: metric missing "
-                                f"(baseline={b}, candidate={c})")
-                continue
-            ratio = c / b if b else float("inf") if c else 1.0
-            verdict = "OK"
-            if ratio > 1.0 + tolerance:
-                verdict = "REGRESSION"
-                failures.append(
-                    f"{name}.{label}: {b:g} -> {c:g} "
-                    f"(+{100 * (ratio - 1):.1f}% > {100 * tolerance:.0f}%)")
-            lines.append(f"{name},{label},{b:g},{c:g},{ratio:.3f},{verdict}")
+        for path, label, direction in METRICS:
+            _gate_metric(_get(base_wl[name], path), _get(cand_wl[name], path),
+                         label, direction, tolerance, failures, lines, name)
     for name in sorted(set(cand_wl) - set(base_wl)):
         lines.append(f"{name},-,-,-,-,NEW (not gated)")
 
-    base_tr = baseline.get("training")
-    if base_tr is not None:
-        cand_tr = candidate.get("training")
-        if cand_tr is None:
-            failures.append("training: section missing from candidate record")
-        else:
-            for path, label in TRAINING_METRICS:
-                b = _get(base_tr, path)
-                c = _get(cand_tr, path)
-                if b is None or c is None:
-                    failures.append(f"training.{label}: metric missing "
-                                    f"(baseline={b}, candidate={c})")
-                    continue
-                ratio = c / b if b else float("inf") if c else 1.0
-                verdict = "OK"
-                if ratio > 1.0 + tolerance:
-                    verdict = "REGRESSION"
-                    failures.append(
-                        f"training.{label}: {b:g} -> {c:g} "
-                        f"(+{100 * (ratio - 1):.1f}% > {100 * tolerance:.0f}%)")
-                lines.append(f"training,{label},{b:g},{c:g},{ratio:.3f},{verdict}")
+    _gate_section(baseline, candidate, "training", TRAINING_METRICS,
+                  tolerance, failures, lines)
+    _gate_section(baseline, candidate, "serving", SERVING_METRICS,
+                  tolerance if serving_tolerance is None else serving_tolerance,
+                  failures, lines)
+    _gate_section(baseline, candidate, "sharding", SHARDING_METRICS,
+                  tolerance, failures, lines)
     return failures, lines
 
 
@@ -110,6 +156,11 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", default="benchmarks/baseline.json")
     ap.add_argument("--candidate", required=True)
     ap.add_argument("--tolerance", type=float, default=TOLERANCE)
+    ap.add_argument("--serving-tolerance", type=float, default=None,
+                    help="wider tolerance for the wall-clock serving "
+                         "throughput gate only (default: --tolerance); use "
+                         "when the committed baseline was recorded on "
+                         "different hardware")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
@@ -117,7 +168,8 @@ def main(argv=None) -> int:
     with open(args.candidate) as f:
         candidate = json.load(f)
 
-    failures, lines = compare(baseline, candidate, args.tolerance)
+    failures, lines = compare(baseline, candidate, args.tolerance,
+                              serving_tolerance=args.serving_tolerance)
     print("workload,metric,baseline,candidate,ratio,verdict")
     for line in lines:
         print(line)

@@ -15,6 +15,10 @@ Sections:
   Training stitched train step vs plain jit: backward-graph kernel
            compression (off/xla/stitch) and the packed multi-tensor
            AdamW+clip update collapsing to a single kernel
+  Sharding mesh-aware stitched train step under shard_map on the forced
+           multi-device host platform: per-shard backward/packed kernel
+           counts, trajectory agreement with the single-device stitched
+           run, mesh-keyed cache entries
   Perf     measured interpret-mode execution of stitched kernels vs oracle
            on the classic patterns (CPU wall time, correctness evidence)
 
@@ -25,6 +29,15 @@ counts, modeled step times, cache cold/warm compile times) is also written
 """
 
 from __future__ import annotations
+
+# The Sharding section needs a multi-device host platform; force 8 CPU
+# devices before the first jax import so the record is identical locally
+# and in CI.  An operator-provided count via XLA_FLAGS is respected.  The
+# modeled/kernel-count metrics of the other sections are device-count
+# independent.
+from repro.launch.hostenv import force_host_devices
+
+force_host_devices(8)
 
 import argparse
 import json
@@ -271,11 +284,17 @@ def serving(quick: bool) -> dict:
         return sum(len(f.tokens) for f in fins)
 
     results = {}
+    reps = 2 if quick else 3
     for name, fn in (("static", run_static), ("continuous", run_continuous)):
         fn()                                            # warm the compiles
-        t0 = time.perf_counter()
-        tokens = fn()
-        dt = time.perf_counter() - t0
+        best = None
+        for _ in range(reps):        # best-of-reps: tokens_per_sec is gated
+            t0 = time.perf_counter()   # (direction-aware), so damp scheduler
+            tokens = fn()              # jitter instead of gating one sample
+            dt = time.perf_counter() - t0
+            if best is None or dt < best[1]:
+                best = (tokens, dt)
+        tokens, dt = best
         results[name] = {"tokens": tokens, "seconds": dt,
                          "tokens_per_sec": tokens / max(dt, 1e-9)}
         print(f"serve_{name},{dt / max(tokens, 1) * 1e6:.1f},"
@@ -399,6 +418,110 @@ def training(quick: bool) -> dict:
     }
 
 
+def sharding(quick: bool) -> dict | None:
+    """Mesh-aware stitched training under shard_map (forced 8-device host):
+    per-shard backward + packed-update plans at shard-local shapes,
+    trajectory agreement with the single-device stitched run, and the
+    mesh-keyed cache behavior (one entry per placement)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.cache import CompilationService, StitchCache
+    from repro.configs import get_reduced
+    from repro.core import StitchCompiler
+    from repro.models import build_model
+    from repro.optim import AdamWConfig
+    from repro.train import StitchedTrainStep, init_state
+
+    n = len(jax.devices())
+    print("\n# Sharding — shard_map stitched train step (per-shard graphs)")
+    if n < 2:
+        print("# skipped: single-device host "
+              "(set --xla_force_host_platform_device_count)")
+        return None
+    mesh = jax.make_mesh((n // 2, 2), ("data", "model"))
+    cfg = get_reduced("qwen3_1_7b")
+    model = build_model(cfg)
+    opt_cfg = AdamWConfig(warmup_steps=5, total_steps=100)
+    B, S = n, 8
+
+    def batch(i):
+        r = np.random.default_rng(7000 + i)
+        return {"tokens": jnp.asarray(r.integers(0, cfg.vocab, (B, S)), jnp.int32),
+                "labels": jnp.asarray(r.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+
+    # max_background=0 makes the upgrade deterministic: step 0 runs the XLA
+    # fallbacks, then the stitched plans are landed synchronously
+    svc_sh = CompilationService(max_background=0)
+    st_sh = StitchedTrainStep(model, opt_cfg, service=svc_sh, mesh=mesh)
+    svc_1d = CompilationService(max_background=0)
+    st_1d = StitchedTrainStep(model, opt_cfg, service=svc_1d)
+
+    s_sh = jax.device_put(init_state(model, jax.random.PRNGKey(0)),
+                          st_sh.state_shardings())
+    s_1d = init_state(model, jax.random.PRNGKey(0))
+    t0 = time.perf_counter()
+    s_sh, m_sh = st_sh(s_sh, batch(0))
+    s_1d, m_1d = st_1d(s_1d, batch(0))
+    deltas = [abs(float(m_sh["loss"]) - float(m_1d["loss"]))]
+    for st, svc in ((st_sh, svc_sh), (st_1d, svc_1d)):
+        for phase in (st._grad, st._packed):
+            svc.compiler("stitch", phase.placement).compile(
+                phase.graph, bypass_cache_lookup=True)
+    steps = 2 if quick else 4
+    for i in range(1, steps):
+        s_sh, m_sh = st_sh(s_sh, batch(i))
+        s_1d, m_1d = st_1d(s_1d, batch(i))
+        deltas.append(abs(float(m_sh["loss"]) - float(m_1d["loss"])))
+    dt = time.perf_counter() - t0
+
+    grad_plan = st_sh._grad.plan_stats()
+    packed_plan = st_sh._packed.report().get("plan", {})
+    off = StitchCompiler(mode="off", use_pallas=False).compile(st_sh._grad.graph)
+
+    # mesh-keyed entries: the same graph compiled under two placements makes
+    # two distinct cache entries (neither shadows the other)
+    entries_cache = StitchCache()
+    for placement in (st_sh._grad.placement, ""):
+        StitchCompiler(mode="stitch", use_pallas=False, cache=entries_cache,
+                       placement=placement).compile(st_sh._packed.graph)
+    mesh_keyed_entries = len(entries_cache.store.memory)
+
+    print(f"shard_grad_kernels,,off={off.stats.n_kernels} "
+          f"stitch={grad_plan['n_kernels']} (per-shard, "
+          f"mesh={dict(mesh.shape)})")
+    print(f"shard_packed_update,,{packed_plan.get('n_kernels')} packed "
+          f"kernel(s) over TP-local panels")
+    print(f"shard_trajectory,,max_loss_delta={max(deltas):.2e} over "
+          f"{steps} steps ({dt:.1f}s)")
+    print(f"shard_cache,,mesh_keyed_entries={mesh_keyed_entries} "
+          f"(same graph, two placements)")
+    print(f"# upgrade: grad={st_sh._grad.status} "
+          f"optimizer={st_sh._packed.status} "
+          f"fallback_steps={st_sh.fallback_steps}")
+
+    return {
+        "mesh": {k: int(v) for k, v in mesh.shape.items()},
+        "devices": n, "batch": B, "seq": S, "steps": steps,
+        "grad_local": {
+            "n_ops": grad_plan["n_ops"],
+            "kernels": {"off": off.stats.n_kernels,
+                        "stitch": grad_plan["n_kernels"]},
+            "modeled_time_s": {"off": off.stats.modeled_time,
+                               "stitch": grad_plan["modeled_time"]},
+        },
+        "packed_local": {
+            "kernels": {"stitch": packed_plan.get("n_kernels")},
+            "modeled_time_s": {"stitch": packed_plan.get("modeled_time")},
+        },
+        "trajectory": {"max_loss_delta_vs_single_device": max(deltas),
+                       "statuses": {"grad": st_sh._grad.status,
+                                    "optimizer": st_sh._packed.status,
+                                    "fallback_steps": st_sh.fallback_steps}},
+        "cache": {"mesh_keyed_entries": mesh_keyed_entries,
+                  "per_placement": svc_sh.cache.report().get("per_placement")},
+    }
+
+
 def perf_measured(quick: bool):
     """Wall-clock interpret-mode stitched kernels vs unfused jnp on the
     canonical patterns — correctness + relative-ordering evidence."""
@@ -458,6 +581,7 @@ def main() -> None:
     cache = cache_timing(graphs, cost, args.quick)
     serve = serving(args.quick)
     train = training(args.quick)
+    shard = sharding(args.quick)
     perf_measured(args.quick)
 
     if args.json:
@@ -471,6 +595,8 @@ def main() -> None:
             "serving": serve,
             "training": train,
         }
+        if shard is not None:
+            record["sharding"] = shard
         with open(args.json, "w") as f:
             json.dump(record, f, indent=2)
         print(f"\n# wrote {args.json}")

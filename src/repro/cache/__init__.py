@@ -7,13 +7,14 @@ cache facade / miss-then-upgrade compilation service (:mod:`.service`).
 """
 
 from .policy import BucketPolicy, BucketStats, EvictionPolicy
-from .signature import GraphSignature, compute_signature, node_struct_hashes
+from .signature import (GraphSignature, compute_signature, node_struct_hashes,
+                        placement_key)
 from .store import DiskStore, GroupRecord, MemoryStore, PlanRecord, TwoTierStore
 from .service import CompilationService, StitchCache, extract_record, replay_record
 
 __all__ = [
     "BucketPolicy", "BucketStats", "EvictionPolicy",
-    "GraphSignature", "compute_signature", "node_struct_hashes",
+    "GraphSignature", "compute_signature", "node_struct_hashes", "placement_key",
     "DiskStore", "GroupRecord", "MemoryStore", "PlanRecord", "TwoTierStore",
     "CompilationService", "StitchCache", "extract_record", "replay_record",
 ]

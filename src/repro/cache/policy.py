@@ -55,14 +55,25 @@ class EvictionPolicy:
 
 @dataclass
 class BucketStats:
-    """Per-bucket hit/miss accounting (observability for the serving tier)."""
+    """Per-bucket hit/miss accounting (observability for the serving tier).
+
+    Lookups also aggregate per *placement* (the mesh+PartitionSpec key of a
+    sharded compile, ``""`` for single-device) so a multi-mesh deployment
+    can see which mesh is cold — a miss storm isolated to one placement
+    means that mesh has never been compiled, not that the cache is broken.
+    """
 
     hits: dict[str, int] = field(default_factory=dict)
     misses: dict[str, int] = field(default_factory=dict)
+    placement_hits: dict[str, int] = field(default_factory=dict)
+    placement_misses: dict[str, int] = field(default_factory=dict)
 
-    def record(self, bucket: str, hit: bool) -> None:
+    def record(self, bucket: str, hit: bool, placement: str = "") -> None:
         d = self.hits if hit else self.misses
         d[bucket] = d.get(bucket, 0) + 1
+        p = self.placement_hits if hit else self.placement_misses
+        label = placement or "single-device"
+        p[label] = p.get(label, 0) + 1
 
     @property
     def total_hits(self) -> int:
@@ -86,5 +97,11 @@ class BucketStats:
             "per_bucket": {
                 b: {"hits": self.hits.get(b, 0), "misses": self.misses.get(b, 0)}
                 for b in sorted(set(self.hits) | set(self.misses))
+            },
+            "per_placement": {
+                p: {"hits": self.placement_hits.get(p, 0),
+                    "misses": self.placement_misses.get(p, 0)}
+                for p in sorted(set(self.placement_hits)
+                                | set(self.placement_misses))
             },
         }

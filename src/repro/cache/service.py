@@ -48,6 +48,7 @@ def extract_record(
     bucket_key: str,
     hw: str,
     solve_seconds: float = 0.0,
+    placement: str = "",
 ) -> PlanRecord:
     """Freeze a compiled plan into canonical coordinates."""
     idx = sig.node_to_index
@@ -78,6 +79,7 @@ def extract_record(
         objective=ilp.objective if ilp else 0.0,
         ilp_iterations=ilp.iterations if ilp else 0,
         solve_seconds=solve_seconds,
+        placement=placement,
     )
 
 
@@ -172,10 +174,14 @@ class StitchCache:
 
     # -- keys -----------------------------------------------------------------
     def key_for(self, sig: GraphSignature, mode: str = "stitch",
-                hw: str = "") -> tuple:
+                hw: str = "", placement: str = "") -> tuple:
         # hw is part of the durable key: a plan tuned for one chip's launch
-        # latency / on-chip budget must not shadow the other chip's optimum
-        return (sig.graph_key, sig.bucket_key(self.bucket_policy), mode, hw)
+        # latency / on-chip budget must not shadow the other chip's optimum.
+        # placement (mesh + PartitionSpecs, see signature.placement_key) is
+        # too: a plan solved at one mesh's shard-local shapes never replays
+        # at another mesh or at the single-device ("") placement.
+        return (sig.graph_key, sig.bucket_key(self.bucket_policy), mode, hw,
+                placement)
 
     def signature_of(self, g: Graph) -> GraphSignature:
         return compute_signature(g)
@@ -188,18 +194,20 @@ class StitchCache:
         sig: GraphSignature | None = None,
         count: bool = True,
     ) -> CompiledGraph | None:
-        live_key = (id(g), compiler.mode, compiler.hw.name, compiler.use_pallas)
+        placement = getattr(compiler, "placement", "")
+        live_key = (id(g), compiler.mode, compiler.hw.name,
+                    compiler.use_pallas, placement)
         with self._lock:
             live = self._live.get(live_key)
         if live is not None and live[0] is g and live[3] == len(g.nodes):
             if count:
                 with self._lock:
-                    self.stats.record(live[2], hit=True)
+                    self.stats.record(live[2], hit=True, placement=placement)
             art = copy.copy(live[1])   # fresh stats: don't rewrite the miss's
             art.stats = dataclasses.replace(live[1].stats, cache_status="hit")
             return art
         sig = sig or compute_signature(g)
-        key = self.key_for(sig, compiler.mode, compiler.hw.name)
+        key = self.key_for(sig, compiler.mode, compiler.hw.name, placement)
         with self._lock:
             rec = self.store.get(key)
         compiled = None
@@ -212,7 +220,8 @@ class StitchCache:
                 self._remember_live(g, compiled, compiler, key[1])
         if count:
             with self._lock:
-                self.stats.record(key[1], hit=compiled is not None)
+                self.stats.record(key[1], hit=compiled is not None,
+                                  placement=placement)
         return compiled
 
     def _remember_live(self, g: Graph, compiled: CompiledGraph, compiler,
@@ -221,7 +230,9 @@ class StitchCache:
             if len(self._live) >= self._live_capacity:
                 self._live.clear()
             self._live[(id(g), compiler.mode, compiler.hw.name,
-                        compiler.use_pallas)] = (g, compiled, bucket, len(g.nodes))
+                        compiler.use_pallas,
+                        getattr(compiler, "placement", ""))] = (
+                g, compiled, bucket, len(g.nodes))
 
     def insert(
         self,
@@ -234,7 +245,9 @@ class StitchCache:
         sig = sig or compute_signature(g)
         bucket = sig.bucket_key(self.bucket_policy)
         hw = compiler.hw.name if compiler is not None else ""
-        rec = extract_record(g, sig, compiled, bucket, hw, solve_seconds)
+        placement = getattr(compiler, "placement", "") if compiler else ""
+        rec = extract_record(g, sig, compiled, bucket, hw, solve_seconds,
+                             placement=placement)
         with self._lock:
             self.store.put(rec)
         if compiler is not None:
@@ -276,44 +289,51 @@ class CompilationService:
         self._threads: list[threading.Thread] = []
         self.last_error: str | None = None   # last background-compile failure
 
-    def compiler(self, mode: str) -> StitchCompiler:
+    def compiler(self, mode: str, placement: str = "") -> StitchCompiler:
         return StitchCompiler(
             hw=self.hw,
             mode=mode,
             gen_cfg=self.gen_cfg,
             use_pallas=self.use_pallas,
             cache=self.cache if mode == "stitch" else None,
+            placement=placement,
         )
 
-    def compile(self, g: Graph) -> CompiledGraph:
+    def compile(self, g: Graph, placement: str = "") -> CompiledGraph:
         """Blocking cache-aware full compile (offline / warmup path)."""
-        return self.compiler("stitch").compile(g)
+        return self.compiler("stitch", placement).compile(g)
 
-    def compile_or_fallback(self, g: Graph) -> tuple[CompiledGraph, str]:
+    def compile_or_fallback(self, g: Graph,
+                            placement: str = "") -> tuple[CompiledGraph, str]:
         """Never blocks on the stitch pipeline.
 
         Returns ``(executable, status)`` where status is ``"hit"`` (replayed
         stitched plan), ``"pending"`` (a background compile for this key is
         already in flight, or the worker cap deferred it), or ``"miss"``
         (fallback returned now, upgrade kicked off in the background).
+
+        ``placement`` is the mesh+PartitionSpec key the graph was traced at
+        (shard-local shapes); it scopes both the lookup and the background
+        compile's insert, so meshes never shadow each other's plans.
         """
-        stitch = self.compiler("stitch")
+        stitch = self.compiler("stitch", placement)
         sig = compute_signature(g)
         hit = self.cache.lookup(g, stitch, sig=sig)
         if hit is not None:
             return hit, "hit"
         fallback = self.compiler(self.fallback_mode).compile(g)
-        spawned = self.ensure_compiling(g, sig=sig)
+        spawned = self.ensure_compiling(g, sig=sig, placement=placement)
         return fallback, "miss" if spawned else "pending"
 
-    def ensure_compiling(self, g: Graph, sig: GraphSignature | None = None) -> bool:
+    def ensure_compiling(self, g: Graph, sig: GraphSignature | None = None,
+                         placement: str = "") -> bool:
         """Kick the background stitch compile for ``g`` unless one is already
         in flight for its key.  Returns True when a new compile was spawned.
         A dropped request (worker cap hit on a cold-start burst, or an
         earlier compile that raised) is re-kicked by calling this again;
         engines poll it while still un-upgraded."""
         sig = sig or compute_signature(g)
-        key = self.cache.key_for(sig, "stitch", self.hw.name)
+        key = self.cache.key_for(sig, "stitch", self.hw.name, placement)
         with self._lock:
             self._threads = [x for x in self._threads if x.is_alive()]
             if key in self._pending:
@@ -323,7 +343,7 @@ class CompilationService:
                 # a cold-start burst; this key retries on a later call
                 return False
             self._pending.add(key)
-        stitch = self.compiler("stitch")
+        stitch = self.compiler("stitch", placement)
 
         def _upgrade():
             try:

@@ -54,6 +54,7 @@ __all__ = [
     "GraphSignature",
     "compute_signature",
     "node_struct_hashes",
+    "placement_key",
     "RUNTIME_ONLY_ATTRS",
     "SHAPE_DEPENDENT_ATTRS",
 ]
@@ -162,6 +163,33 @@ class GraphSignature:
         """Digest of shapes after the policy's coarsening."""
         bucketed = tuple(policy.bucket_shape(s) for s in self.shapes)
         return _digest(repr(bucketed))
+
+
+def placement_key(mesh=None, specs=None) -> str:
+    """Stable digest of (mesh shape, PartitionSpecs) — the placement half of
+    a mesh-aware cache key.
+
+    A stitched plan is solved against *shard-local* shapes and a specific
+    data layout: replaying it under a different mesh (or the same mesh with
+    different in-specs) would execute a plan tuned for the wrong block
+    sizes.  ``placement_key`` spells the mesh axis sizes verbatim (human
+    greppable in the disk store's filenames) and digests the flattened
+    PartitionSpecs; the empty string is the single-device / unplaced
+    placement, so existing callers and on-disk records are unaffected.
+    """
+    if mesh is None:
+        return ""
+    axes = ",".join(f"{n}={mesh.shape[n]}" for n in mesh.axis_names)
+    spec_part = ""
+    if specs is not None:
+        from jax.sharding import PartitionSpec as P
+        import jax
+
+        flat = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        spec_part = "/" + _digest(repr([tuple(s) if isinstance(s, P) else s
+                                        for s in flat]))[:12]
+    return f"mesh[{axes}]{spec_part}"
 
 
 def compute_signature(g: Graph) -> GraphSignature:

@@ -25,7 +25,9 @@ from pathlib import Path
 
 __all__ = ["GroupRecord", "PlanRecord", "MemoryStore", "DiskStore", "TwoTierStore"]
 
-RECORD_VERSION = 1
+# v2 added the mesh/PartitionSpec placement component to the key (sharded
+# stitching); v1 records predate it and are treated as misses on read.
+RECORD_VERSION = 2
 
 
 @dataclass(frozen=True)
@@ -67,10 +69,12 @@ class PlanRecord:
     objective: float = 0.0              # ILP objective (observability)
     ilp_iterations: int = 0
     solve_seconds: float = 0.0          # cold compile wall time
+    placement: str = ""                 # mesh+PartitionSpec key ("" = 1-device)
 
     @property
-    def key(self) -> tuple[str, str, str, str]:
-        return (self.graph_key, self.bucket_key, self.mode, self.hw)
+    def key(self) -> tuple[str, str, str, str, str]:
+        return (self.graph_key, self.bucket_key, self.mode, self.hw,
+                self.placement)
 
     def to_json(self) -> dict:
         return {
@@ -80,6 +84,7 @@ class PlanRecord:
             "shape_key": self.shape_key,
             "mode": self.mode,
             "hw": self.hw,
+            "placement": self.placement,
             "n_nodes": self.n_nodes,
             "groups": [g.to_json() for g in self.groups],
             "objective": self.objective,
@@ -102,6 +107,7 @@ class PlanRecord:
             objective=d.get("objective", 0.0),
             ilp_iterations=d.get("ilp_iterations", 0),
             solve_seconds=d.get("solve_seconds", 0.0),
+            placement=d.get("placement", ""),
         )
 
 
@@ -138,10 +144,15 @@ class DiskStore:
         self.max_entries = max_entries
 
     def _path(self, key: tuple) -> Path:
-        graph_key, bucket_key, mode, hw = key
+        graph_key, bucket_key, mode, hw, placement = key
         hw_slug = "".join(c if c.isalnum() else "-" for c in hw)
+        # placement slug keeps the mesh shape human-greppable; the full
+        # string is re-checked against the record body (rec.key != key below)
+        pl_slug = "".join(c for c in placement if c.isalnum())[:24]
+        pl_part = f"_{pl_slug}" if pl_slug else ""
         return (self.directory
-                / f"plan_{graph_key[:12]}_{bucket_key[:12]}_{mode}_{hw_slug}.json")
+                / f"plan_{graph_key[:12]}_{bucket_key[:12]}_{mode}_{hw_slug}"
+                  f"{pl_part}.json")
 
     def get(self, key: tuple) -> PlanRecord | None:
         path = self._path(key)

@@ -205,6 +205,7 @@ class StitchCompiler:
         execution_based_eval: bool = False,
         use_pallas: bool = True,
         cache=None,
+        placement: str = "",
     ):
         assert mode in ("off", "xla", "stitch")
         self.hw = hw
@@ -217,6 +218,11 @@ class StitchCompiler:
         # set, stitch-mode compiles replay cached plans and populate the
         # cache on miss; pattern generation/ILP/tuning run only cold.
         self.cache = cache
+        # Mesh/PartitionSpec placement this compile targets (see
+        # repro.cache.signature.placement_key).  Part of the cache key: a
+        # plan solved for one mesh's shard-local shapes never replays at
+        # another.  "" = single-device / unplaced.
+        self.placement = placement
 
     # -- planning -------------------------------------------------------------
     def plan(self, g: Graph) -> tuple[list[FusionPattern], PlanResult | None]:

@@ -14,6 +14,14 @@ same role as the paper's opaque ops — but the graph stays runnable
 end-to-end because the node carries a closure evaluating the original
 primitive); backward passes built by ``jax.value_and_grad`` trace through
 the same entry point as forward code.
+
+Shard-local functions (``shard_map`` bodies) that contain collectives —
+``psum``/``pmean``/``all_gather`` over a named mesh axis — trace with
+``axis_env=[(axis, size), ...]``: the collective becomes an executable
+CUSTOM node (a fusion partition, exactly like the paper's opaque ops, which
+is also the right cost-model story: a collective is a data-movement barrier
+no kernel fusion may cross) whose closure re-binds the primitive, so the
+compiled artifact runs *inside* ``shard_map`` where the axis names are live.
 """
 
 from __future__ import annotations
@@ -93,10 +101,18 @@ def _stable_params_sig(params: dict) -> str:
     return ";".join(f"{k}={spell(params[k])}" for k in sorted(params))
 
 
-def trace_to_graph(fn: Callable, *example_args, name: str = "traced") -> tuple[Graph, list[str]]:
+def trace_to_graph(fn: Callable, *example_args, name: str = "traced",
+                   axis_env=None) -> tuple[Graph, list[str]]:
     """Returns (graph, input_names) where input_names[i] is the PARAMETER
-    node for positional argument i (flattened pytree order)."""
-    closed = jax.make_jaxpr(fn)(*example_args)
+    node for positional argument i (flattened pytree order).
+
+    ``axis_env``: sequence of ``(axis_name, size)`` pairs making mesh axes
+    visible to the trace, for shard-local functions containing collectives
+    (see module docstring)."""
+    if axis_env:
+        closed = jax.make_jaxpr(fn, axis_env=list(axis_env))(*example_args)
+    else:
+        closed = jax.make_jaxpr(fn)(*example_args)
     g = Graph(name)
     fresh_ctr = [0]
 

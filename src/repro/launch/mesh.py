@@ -20,8 +20,21 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 
 def make_host_mesh(model_parallel: int = 1) -> Mesh:
-    """Largest mesh over whatever devices exist (1 on this CPU container) —
-    used by the real train/serve drivers and the elastic-restart path."""
+    """Largest (data, model) mesh over whatever devices exist (1 on this CPU
+    container, N under ``--xla_force_host_platform_device_count=N``) — used
+    by the real train/serve drivers and the elastic-restart path.
+
+    ``model_parallel`` must divide the device count: the old
+    ``max(n // model_parallel, 1)`` silently built a mesh wanting
+    ``data * model_parallel != n`` devices, and ``jax.make_mesh`` then
+    failed with an opaque reshape error deep in the launcher."""
     n = len(jax.devices())
-    data = max(n // model_parallel, 1)
-    return jax.make_mesh((data, model_parallel), ("data", "model"))
+    if model_parallel < 1:
+        raise ValueError(f"model_parallel must be >= 1, got {model_parallel}")
+    if n % model_parallel != 0:
+        divisors = [d for d in range(1, n + 1) if n % d == 0]
+        raise ValueError(
+            f"model_parallel={model_parallel} does not divide the host "
+            f"device count ({n} devices); valid values are {divisors}")
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

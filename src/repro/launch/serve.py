@@ -18,9 +18,23 @@ when ``--cache-dir`` is given), serves through the stitched decode artifact
 (miss-then-upgrade: the XLA fallback answers instantly while the stitch
 pipeline compiles in the background), and prints ``Engine.stitch_report()``
 at exit.
+
+``--model-parallel`` (with real devices or ``--host-devices N``) builds the
+host mesh and turns on the engine's DP-replica dispatch: the scheduler's
+batched decode step spreads its slots across the data-parallel replicas via
+``shard_map``, and with ``--stitch`` the decode graph is traced and solved
+at shard-local shapes under a mesh-keyed cache entry.
 """
 
 from __future__ import annotations
+
+import sys
+
+# --host-devices must take effect before the first jax import (jax locks
+# the device count at first init); argparse proper still declares the flag
+from repro.launch.hostenv import force_host_devices
+
+force_host_devices(argv=sys.argv)
 
 import argparse
 import json
@@ -40,10 +54,19 @@ def build_engine(args, cfg, model, params):
     if args.stitch:
         from repro.cache import CompilationService, StitchCache
         svc = CompilationService(StitchCache(directory=args.cache_dir))
+    # DP-replica dispatch is opt-in (--mesh, implied by --model-parallel>1):
+    # a multi-device host with the default slot count must not change
+    # behavior or hit the slots-divisibility check uninvited
+    mesh = None
+    if args.mesh or args.model_parallel != 1:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(args.model_parallel)
     eng = Engine(model, params, ServeConfig(
         batch=args.slots, max_len=args.max_len,
         max_new_tokens=args.new_tokens, eos_id=args.eos,
-        stitch_execute=args.stitch), stitch_service=svc)
+        stitch_execute=args.stitch), stitch_service=svc, mesh=mesh)
+    if mesh is not None:
+        print(f"mesh={dict(mesh.shape)} dp_replicas={eng.dp_replicas}")
     return eng
 
 
@@ -131,6 +154,15 @@ def main():
                          "(miss-then-upgrade)")
     ap.add_argument("--cache-dir", default=None,
                     help="persistent StitchCache directory (with --stitch)")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="model-axis size of the host mesh (must divide the "
+                         "device count); >1 implies --mesh")
+    ap.add_argument("--mesh", action="store_true",
+                    help="enable the DP-replica decode dispatch over the "
+                         "host mesh (slots must divide the DP size)")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="force N host-platform devices (see module "
+                         "docstring)")
     args = ap.parse_args()
     if args.max_len is None:
         args.max_len = args.prompt_len + args.new_tokens

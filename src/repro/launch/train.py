@@ -13,9 +13,25 @@ pipeline (:class:`repro.train.StitchedTrainStep`): the backward pass traces
 to StitchIR, the AdamW+clip update runs as one packed multi-tensor kernel,
 and each step polls the cache so the run upgrades from the instant XLA
 fallback to stitched plans as background compiles land.
+
+``--stitch`` composes with ``--model-parallel`` (and any multi-device
+host): the stitched step dispatches through ``shard_map`` on per-shard
+graphs — batch rows split across the mesh for the backward pass, params
+updated TP-shard-locally by the packed kernel — with mesh-keyed cache
+entries.  ``--host-devices N`` forces N host-platform devices for CI /
+laptop rehearsal (the same ``--xla_force_host_platform_device_count``
+mechanism as :mod:`repro.launch.dryrun`).
 """
 
 from __future__ import annotations
+
+import sys
+
+# --host-devices must take effect before the first jax import (jax locks
+# the device count at first init); argparse proper still declares the flag
+from repro.launch.hostenv import force_host_devices
+
+force_host_devices(argv=sys.argv)
 
 import argparse
 import dataclasses
@@ -59,6 +75,9 @@ def main():
     ap.add_argument("--cache-dir", default=None,
                     help="StitchCache directory (fusion plans persist and "
                          "replay across runs)")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="force N host-platform devices (must be first-"
+                         "parsed before jax init; see module docstring)")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -80,28 +99,39 @@ def main():
     aparams = jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype),
                            state.params)
     pspecs = param_pspecs(aparams, cfg, mesh)
-    opt_specs = adamw.opt_state_pspecs(state.opt, pspecs, mesh)
-    state_sh = jax.tree.map(
-        lambda s: NamedSharding(mesh, s),
-        TrainState(params=pspecs, opt=opt_specs, step=P()),
-        is_leaf=lambda x: isinstance(x, P))
+
+    stitched = None
+    if args.stitch:
+        # stitched training: the backward pass and packed AdamW+clip update
+        # execute through compiled StitchIR artifacts, polling the cache each
+        # step so the run upgrades from the XLA fallback mid-flight.  On a
+        # multi-device mesh both phases dispatch through shard_map on
+        # per-shard graphs (mesh-keyed cache entries).
+        from repro.cache import CompilationService, StitchCache
+        from repro.train import StitchedTrainStep
+        svc = CompilationService(cache=StitchCache(args.cache_dir))
+        stitched = StitchedTrainStep(model, opt_cfg,
+                                     microbatches=args.microbatches,
+                                     service=svc, mesh=mesh,
+                                     param_specs=pspecs)
+
+    if stitched is not None and stitched.mesh is not None:
+        # packed panels update shard-local param/moment slices, so m/v must
+        # stay co-located with params (no ZeRO offset on the stitched path)
+        state_sh = stitched.state_shardings()
+    else:
+        opt_specs = adamw.opt_state_pspecs(state.opt, pspecs, mesh)
+        state_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            TrainState(params=pspecs, opt=opt_specs, step=P()),
+            is_leaf=lambda x: isinstance(x, P))
     state = jax.device_put(state, state_sh)
 
     data = SyntheticTokens(DataConfig(cfg.vocab, args.seq, args.batch))
     bspecs = jax.tree.map(lambda s: NamedSharding(mesh, s),
                           batch_pspecs(data.batch(0), mesh),
                           is_leaf=lambda x: isinstance(x, P))
-    stitched = None
-    if args.stitch:
-        # stitched training: the backward pass and packed AdamW+clip update
-        # execute through compiled StitchIR artifacts, polling the cache each
-        # step so the run upgrades from the XLA fallback mid-flight
-        from repro.cache import CompilationService, StitchCache
-        from repro.train import StitchedTrainStep
-        svc = CompilationService(cache=StitchCache(args.cache_dir))
-        stitched = StitchedTrainStep(model, opt_cfg,
-                                     microbatches=args.microbatches,
-                                     service=svc)
+    if stitched is not None:
         step_fn = stitched
     else:
         step_raw = make_train_step(model, opt_cfg, microbatches=args.microbatches)
@@ -139,13 +169,18 @@ def main():
         rep = stitched.report()
         grad_plan = rep["grad"].get("plan") or {}
         opt_plan = rep["optimizer"].get("plan") or {}
+        mesh_note = (f" mesh={rep['mesh']} (shard_map per-shard graphs)"
+                     if "mesh" in rep else "")
         print(f"stitch: grad {rep['grad']['status']} "
               f"({grad_plan.get('n_ops', '?')} ops -> "
               f"{grad_plan.get('n_kernels', '?')} kernels), "
               f"optimizer {rep['optimizer']['status']} "
               f"({opt_plan.get('n_ops', '?')} ops -> "
               f"{opt_plan.get('n_kernels', '?')} packed kernel(s)), "
-              f"fallback_steps={rep['fallback_steps']}")
+              f"fallback_steps={rep['fallback_steps']}{mesh_note}")
+        placements = rep.get("cache", {}).get("per_placement")
+        if placements:
+            print(f"stitch cache per-placement: {placements}")
 
 
 if __name__ == "__main__":

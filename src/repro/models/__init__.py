@@ -2,11 +2,14 @@
 
 from .api import Model, build_model
 from .config import HybridConfig, ModelConfig, MoEConfig, SHAPES, ShapeConfig, SSMConfig
-from .sharding import batch_pspecs, cache_pspecs, mesh_axes, param_pspecs, param_shardings
+from .sharding import (batch_pspecs, batch_shard_axes, cache_pspecs,
+                       local_avals, local_shape, mesh_axes, param_pspecs,
+                       param_shardings, slot_pspecs)
 
 __all__ = [
     "Model", "build_model",
     "ModelConfig", "MoEConfig", "SSMConfig", "HybridConfig",
     "ShapeConfig", "SHAPES",
     "param_pspecs", "param_shardings", "batch_pspecs", "cache_pspecs", "mesh_axes",
+    "local_avals", "local_shape", "batch_shard_axes", "slot_pspecs",
 ]

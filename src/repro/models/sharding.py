@@ -231,6 +231,93 @@ def cache_pspecs(cache_tree, cfg: ModelConfig, mesh: Mesh):
     return jax.tree_util.tree_map_with_path(spec, cache_tree)
 
 
+# -- shard-local views (shard_map tracing support) -----------------------------
+
+def _spec_axes(entry) -> tuple[str, ...]:
+    if entry is None:
+        return ()
+    return (entry,) if isinstance(entry, str) else tuple(entry)
+
+
+def local_shape(shape: tuple[int, ...], spec: P, mesh: Mesh) -> tuple[int, ...]:
+    """The per-device block shape of a global ``shape`` under ``spec`` — what
+    a ``shard_map`` body sees, and therefore the shapes the stitch pipeline
+    traces and solves per-shard graphs at."""
+    parts = tuple(spec) + (None,) * (len(shape) - len(spec))
+    out = list(shape)
+    for i, entry in enumerate(parts):
+        n = 1
+        for a in _spec_axes(entry):
+            n *= mesh.shape[a]
+        if n > 1:
+            if out[i] % n:
+                raise ValueError(
+                    f"dim {i} of shape {shape} not divisible by mesh axes "
+                    f"{_spec_axes(entry)} (size {n})")
+            out[i] //= n
+    return tuple(out)
+
+
+def local_avals(tree, specs, mesh: Mesh):
+    """ShapeDtypeStruct pytree of shard-local blocks.  ``specs`` is a pytree
+    of PartitionSpec matching ``tree`` (PartitionSpecs stay whole because
+    ``tree``'s structure drives the map)."""
+    return jax.tree.map(
+        lambda leaf, spec: jax.ShapeDtypeStruct(
+            local_shape(tuple(leaf.shape), spec, mesh), leaf.dtype),
+        tree, specs)
+
+
+def batch_shard_axes(mesh: Mesh, batch_dim: int) -> tuple[str, ...]:
+    """Mesh axes to split a leading batch/slot dim over for shard-local
+    compute: every axis when the dim divides the whole mesh (the model axis
+    moonlights as extra DP — the gathered-params backward/decode body has no
+    TP collectives, so its only use for the model axis is more rows), else
+    the DP axes, else none (replicated rows; reductions stay correct because
+    cross-shard means of identical values are the identity)."""
+    if batch_dim % mesh.size == 0:
+        return tuple(mesh.axis_names)
+    dp, _ = mesh_axes(mesh)
+    if batch_dim % _dp_size(mesh) == 0:
+        return dp
+    return ()
+
+
+def slot_pspecs(state_tree, mesh: Mesh, axes: tuple[str, ...]):
+    """DP-replica specs for the serving decode state: shard each leaf's
+    slot/batch dim over ``axes`` and replicate everything else.  Unlike
+    :func:`cache_pspecs` there is deliberately no TP dim here — the sharded
+    decode body runs shard-locally (no in-model collectives), so sequence or
+    head dims must stay whole within a replica."""
+    axes = tuple(axes)
+
+    def spec(path, leaf):
+        name = _path_str(path)
+        d = len(leaf.shape)
+        if d == 0 or not axes:
+            return P(*([None] * d))
+        # slot dim per leaf kind: KV caches (L, B, S, H, dh) -> dim d-4;
+        # ssm (L, B, Dm, N) / conv (L, B, K-1, Dm) -> dim 1; lru (..., B, D)
+        # -> dim d-2; everything else (length vector, tokens, logits) -> dim 0
+        if name.endswith(("k", "v")) and d >= 4:
+            dim = d - 4
+        elif name.endswith(("ssm", "conv")) and d == 4:
+            dim = 1
+        elif name.endswith(("lru", "lru_rest")) and d >= 3:
+            dim = d - 2
+        else:
+            dim = 0
+        out = [None] * d
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if leaf.shape[dim] % n == 0:
+            out[dim] = axes
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(spec, state_tree)
+
+
 # -- in-graph activation sharding hints ---------------------------------------
 
 def hint(x, *axes):

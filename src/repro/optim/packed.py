@@ -117,17 +117,26 @@ def unpack_tree(layout: PackedLayout, panels, dtypes=None):
     return jax.tree_util.tree_unflatten(layout.treedef, leaves)
 
 
-def packed_update_fn(cfg: adamw.AdamWConfig) -> Callable:
+def packed_update_fn(cfg: adamw.AdamWConfig, external_ssq: bool = False) -> Callable:
     """The update over packed panels, formula-for-formula equal to
     :func:`repro.optim.adamw.update` (zero padding is a fixed point of the
-    update: g=0, p=0 stay 0, so panels never leak across steps)."""
+    update: g=0, p=0 stay 0, so panels never leak across steps).
 
-    def update(ps, gs, ms, vs, lr, b1c, b2c):
-        ssq = None
-        for g in gs:                       # leaf order == reference leaf order
-            s = jnp.sum(jnp.square(g))
-            ssq = s if ssq is None else ssq + s
-        norm = jnp.sqrt(ssq)
+    ``external_ssq`` is the sharded (shard_map) variant: the panels are
+    TP-shard-local slices, so the global-norm sum-of-squares cannot be
+    formed inside the kernel — it arrives as one extra scalar operand
+    (computed from the psum-mean'd full gradients outside the stitched
+    region) and the kernel stays a pure per-shard packed update."""
+
+    def update(ps, gs, ms, vs, lr, b1c, b2c, gss=None):
+        if external_ssq:
+            norm = jnp.sqrt(gss)
+        else:
+            ssq = None
+            for g in gs:                   # leaf order == reference leaf order
+                s = jnp.sum(jnp.square(g))
+                ssq = s if ssq is None else ssq + s
+            norm = jnp.sqrt(ssq)
         scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(norm, 1e-12))
         new_p, new_m, new_v = [], [], []
         for p, g, m, v in zip(ps, gs, ms, vs):
@@ -162,12 +171,15 @@ class PackedAdamW:
     def __init__(self, cfg: adamw.AdamWConfig, params,
                  rows: int = DEFAULT_ROWS, service=None,
                  compiler: StitchCompiler | None = None,
-                 use_compiler: bool = True):
+                 use_compiler: bool = True, external_ssq: bool = False,
+                 placement: str = ""):
         self.cfg = cfg
         self.layout = make_layout(params, rows=rows)
         self.service = service
         self.status: str | None = None
-        self._fn = packed_update_fn(cfg)
+        self.external_ssq = external_ssq
+        self.placement = placement
+        self._fn = packed_update_fn(cfg, external_ssq=external_ssq)
         # panelization is pure pad/reshape/cast glue; jitted it is two
         # compiled calls per step instead of O(leaves) host-driven dispatches
         # bracketing the packed kernel
@@ -184,7 +196,7 @@ class PackedAdamW:
             [jnp.zeros(self.layout.panel_shape(i), f32)
              for i in range(self.layout.n_leaves)]
             for _ in range(4)
-        ) + (jnp.zeros((), f32),) * 3
+        ) + (jnp.zeros((), f32),) * (4 if external_ssq else 3)
         self._example = example
         self.graph: Graph | None = None
         self._names: list[str] | None = None
@@ -201,11 +213,13 @@ class PackedAdamW:
             jax.eval_shape(self._fn, *example))
         if service is not None:
             from repro.cache.signature import compute_signature
-            self._compiled, self.status = service.compile_or_fallback(self.graph)
+            self._compiled, self.status = service.compile_or_fallback(
+                self.graph, placement=placement)
             self._sig = compute_signature(self.graph)
-            self._lookup_compiler = service.compiler("stitch")
+            self._lookup_compiler = service.compiler("stitch", placement)
         else:
-            compiler = compiler or StitchCompiler(mode="stitch")
+            compiler = compiler or StitchCompiler(mode="stitch",
+                                                  placement=placement)
             self._compiled = compiler.compile(self.graph)
             self.status = "compiled"
 
@@ -237,7 +251,8 @@ class PackedAdamW:
             self._compiled = hit
             self.status = "hit"
         else:
-            self.service.ensure_compiling(self.graph, sig=self._sig)
+            self.service.ensure_compiling(self.graph, sig=self._sig,
+                                          placement=self.placement)
 
     # -- the update ------------------------------------------------------------
     def _run(self, *args):
@@ -248,7 +263,27 @@ class PackedAdamW:
         flat = [outs[o] for o in self.graph.outputs]
         return jax.tree_util.tree_unflatten(self._out_tree, flat)
 
-    def update(self, grads, state: adamw.AdamWState, params):
+    def update_local(self, params, grads, m, v, lr, b1c, b2c, gss=None):
+        """Pure shard-local update over this layout's panels (no polling, no
+        schedule handling): ``(new_params, new_m, new_v, grad_norm)``.
+
+        This is the ``shard_map`` body of the mesh-aware stitched train step
+        — each shard packs its local param/grad/moment slices, runs the one
+        packed kernel, and unpacks, with the clip scale derived from the
+        externally supplied global sum-of-squares (``external_ssq=True``).
+        """
+        ps, gs, ms, vs = self._pack4(params, grads, m, v)
+        args = (ps, gs, ms, vs, jnp.asarray(lr, jnp.float32),
+                jnp.asarray(b1c, jnp.float32), jnp.asarray(b2c, jnp.float32))
+        if self.external_ssq:
+            if gss is None:
+                raise ValueError("external_ssq layout requires gss")
+            args += (jnp.asarray(gss, jnp.float32),)
+        new_p, new_m, new_v, gnorm = self._run(*args)
+        up, um, uv = self._unpack3(new_p, new_m, new_v)
+        return up, um, uv, gnorm
+
+    def update(self, grads, state: adamw.AdamWState, params, gss=None):
         """(new_params, new_state, metrics) — drop-in for adamw.update."""
         self.poll_upgrade()
         cfg = self.cfg
@@ -257,10 +292,7 @@ class PackedAdamW:
         cf = count.astype(jnp.float32)
         b1c = 1 - cfg.b1 ** cf
         b2c = 1 - cfg.b2 ** cf
-        ps, gs, ms, vs = self._pack4(params, grads, state.m, state.v)
-        new_p, new_m, new_v, gnorm = self._run(
-            ps, gs, ms, vs, jnp.asarray(lr, jnp.float32),
-            jnp.asarray(b1c, jnp.float32), jnp.asarray(b2c, jnp.float32))
-        up, um, uv = self._unpack3(new_p, new_m, new_v)
+        up, um, uv, gnorm = self.update_local(
+            params, grads, state.m, state.v, lr, b1c, b2c, gss=gss)
         return (up, adamw.AdamWState(m=um, v=uv, count=count),
                 {"grad_norm": gnorm, "lr": lr})

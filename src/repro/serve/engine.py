@@ -25,6 +25,16 @@ call, so no request ever waits on the tuner.  Decoding executes through the
 stitched artifact only when ``ServeConfig.stitch_execute`` is set (the
 interpret-mode reference path); otherwise the jitted step keeps serving and
 the stitched plan powers kernel-count/step-time reporting and cache warmth.
+
+DP-replica dispatch (``mesh=``): the slot dimension of the batched decode
+step is sharded over the mesh's data-parallel axes (the whole mesh when the
+slot count divides it), so the continuous-batching scheduler's one batched
+step per iteration spreads its slots across replicas — each replica decodes
+its slice of the slots against its slice of the KV cache, with the params
+gathered in-body (they may live TP-sharded at rest).  Both the jitted and
+the stitched decode route through ``shard_map``; the stitched executable is
+traced and solved at *shard-local* shapes and cached under a mesh-keyed
+placement.  Admission prefills stay per-request (B=1) and unsharded.
 """
 
 from __future__ import annotations
@@ -35,6 +45,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models.api import Model
 
@@ -57,7 +69,7 @@ class ServeConfig:
 
 class Engine:
     def __init__(self, model: Model, params, cfg: ServeConfig,
-                 stitch_service=None):
+                 stitch_service=None, mesh: Mesh | None = None):
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -66,14 +78,67 @@ class Engine:
         self.stitch_status: str | None = None   # None|hit|miss|pending|error
         self._stitch: dict | None = None
         self._scheduler = None
+        self.mesh = mesh if (mesh is not None and mesh.size > 1) else None
+        self._slot_axes: tuple[str, ...] | None = None
+        self._sharded_decode: dict = {}   # cache avals -> jitted shard_map step
+        if self.mesh is not None:
+            from repro.models.sharding import batch_shard_axes
+            axes = batch_shard_axes(self.mesh, cfg.batch)
+            if not axes:
+                raise ValueError(
+                    f"slots/batch={cfg.batch} does not divide across mesh "
+                    f"{dict(self.mesh.shape)}: the DP-replica dispatch needs "
+                    f"the slot count to be a multiple of the DP size (or of "
+                    f"the whole mesh)")
+            self._slot_axes = axes
         self._ragged_prefill = jax.jit(
             lambda p, toks, tl, ml, **kw: model.prefill(
                 p, toks, true_len=tl, max_len=ml, **kw),
             static_argnames=("ml",))
 
+    @property
+    def dp_replicas(self) -> int:
+        """Replica count the decode batch is spread over (1 when unsharded)."""
+        if self._slot_axes is None:
+            return 1
+        n = 1
+        for a in self._slot_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    # -- DP-replica jitted decode ---------------------------------------------
+    def _sharded_decode_fn(self, cache):
+        """Jitted ``shard_map`` decode with the slot dim split over the DP
+        replicas; built once per cache structure (the body gathers params,
+        so TP-at-rest storage still works — no in-model collectives)."""
+        from repro.models.sharding import slot_pspecs
+        # keyed on avals, not just treedef: the static path's cache carries a
+        # scalar "length" while the scheduler's is a per-slot vector — same
+        # structure, different slot specs.  A dict (not a single slot) so an
+        # engine alternating generate() and step() keeps both compiles warm.
+        key = (jax.tree_util.tree_structure(cache), _avals(cache))
+        fn = self._sharded_decode.get(key)
+        if fn is None:
+            cspecs = slot_pspecs(cache, self.mesh, self._slot_axes)
+            tspec = P(self._slot_axes, None)
+            fn = jax.jit(shard_map(
+                lambda p, c, t: self.model.decode_step(p, c, t),
+                mesh=self.mesh, in_specs=(P(), cspecs, tspec),
+                out_specs=(P(self._slot_axes), cspecs), check_rep=False))
+            self._sharded_decode[key] = fn
+        return fn
+
+    def _jit_decode(self, cache, tok, extra):
+        """One jitted decode step — DP-replica sharded when a mesh is set
+        (extra inputs force the unsharded path: their slot layout is
+        family-specific and not worth a wrong guess)."""
+        if self.mesh is not None and not extra:
+            return self._sharded_decode_fn(cache)(self.params, cache, tok)
+        return self._decode(self.params, cache, tok, **extra)
+
     # -- fusion-stitching plumbing -------------------------------------------
     def _prepare_stitch(self, cache, tok, extra) -> None:
-        from repro.cache.signature import compute_signature
+        from repro.cache.signature import compute_signature, placement_key
         from repro.core.trace import trace_to_graph
 
         # extra is traced as a real input (not baked into the closure) so
@@ -83,26 +148,45 @@ class Engine:
         def step(params, cache, tok, extra):
             return self.model.decode_step(params, cache, tok, **extra)
 
+        # under a mesh the decode graph is traced at SHARD-LOCAL shapes: the
+        # executable runs inside shard_map with the slot dim split over the
+        # DP replicas, and its cache key carries the mesh+spec placement
+        sharded = self.mesh is not None and not extra
+        placement, cspecs, tspec = "", None, None
+        trace_cache, trace_tok = cache, tok
+        if sharded:
+            from repro.models.sharding import local_avals, slot_pspecs
+            cspecs = slot_pspecs(cache, self.mesh, self._slot_axes)
+            tspec = P(self._slot_axes, None)
+            trace_cache = local_avals(cache, cspecs, self.mesh)
+            trace_tok = local_avals(jnp.asarray(tok), tspec, self.mesh)
+            placement = placement_key(self.mesh, (P(), cspecs, tspec))
         try:
-            g, names = trace_to_graph(step, self.params, cache, tok, extra,
-                                      name="decode_step")
-            compiled, status = self.stitch_service.compile_or_fallback(g)
+            g, names = trace_to_graph(step, self.params, trace_cache,
+                                      trace_tok, extra, name="decode_step")
+            compiled, status = self.stitch_service.compile_or_fallback(
+                g, placement=placement)
             out_tree = jax.tree_util.tree_structure(
-                jax.eval_shape(step, self.params, cache, tok, extra))
+                jax.eval_shape(step, self.params, trace_cache, trace_tok,
+                               extra))
         except Exception:
             self.stitch_status = "error"
             self._stitch = {}
             return
         executable = out_tree.num_leaves == len(g.outputs)
         # eligibility keys cover only (cache, tok, extra): params are fixed
-        # for an engine's lifetime, so the per-step check stays cheap
+        # for an engine's lifetime, so the per-step check stays cheap.
+        # in_avals stay GLOBAL — the shard_map boundary does the slicing.
         self._stitch = {"graph": g, "names": names, "out_tree": out_tree,
                         "compiled": compiled, "executable": executable,
                         "in_tree": jax.tree_util.tree_structure(
                             (cache, tok, extra)),
                         "in_avals": _avals((cache, tok, extra)),
                         "sig": compute_signature(g),
-                        "compiler": self.stitch_service.compiler("stitch")}
+                        "sharded": sharded, "cspecs": cspecs, "tspec": tspec,
+                        "placement": placement,
+                        "compiler": self.stitch_service.compiler(
+                            "stitch", placement)}
         self.stitch_status = status
 
     def _refresh_stitch(self) -> None:
@@ -121,15 +205,34 @@ class Engine:
         else:
             # re-kick if our background compile was deferred (worker cap) or
             # died — otherwise this engine would serve the fallback forever
-            svc.ensure_compiling(self._stitch["graph"], sig=self._stitch["sig"])
+            svc.ensure_compiling(self._stitch["graph"], sig=self._stitch["sig"],
+                                 placement=self._stitch.get("placement", ""))
 
-    def _stitch_decode(self, cache, tok, extra):
+    def _stitch_exec(self, params, cache, tok, extra):
         st = self._stitch
-        leaves = jax.tree_util.tree_leaves((self.params, cache, tok, extra))
+        leaves = jax.tree_util.tree_leaves((params, cache, tok, extra))
         env = dict(zip(st["names"], leaves))
         outs = st["compiled"](env)
         flat = [outs[o] for o in st["graph"].outputs]
         return jax.tree_util.tree_unflatten(st["out_tree"], flat)
+
+    def _stitch_decode(self, cache, tok, extra):
+        st = self._stitch
+        if st.get("sharded"):
+            # per-shard stitched execution: the executable was compiled at
+            # shard-local shapes; the shard_map boundary slices the slots.
+            # The jitted wrapper is memoized per executable — rebuilt only
+            # when an upgrade swaps st["compiled"] — so steady-state decode
+            # is a jit-cache hit per token, not a retrace.
+            if st.get("_sm_for") is not st["compiled"]:
+                st["_sm_fn"] = jax.jit(shard_map(
+                    lambda p, c, t: self._stitch_exec(p, c, t, {}),
+                    mesh=self.mesh, in_specs=(P(), st["cspecs"], st["tspec"]),
+                    out_specs=(P(self._slot_axes), st["cspecs"]),
+                    check_rep=False))
+                st["_sm_for"] = st["compiled"]
+            return st["_sm_fn"](self.params, cache, jnp.asarray(tok))
+        return self._stitch_exec(self.params, cache, tok, extra)
 
     def stitch_report(self) -> dict:
         """Observability: upgrade status, plan stats, cache hit rates."""
@@ -173,13 +276,14 @@ class Engine:
     def _decode_dispatch(self, cache, tok, extra):
         """One decode step through the stitched artifact when eligible,
         else the jitted step — polling the upgrade each call (the scheduler
-        path, so a request stream upgrades mid-stream)."""
+        path, so a request stream upgrades mid-stream).  Both routes are
+        DP-replica sharded when the engine has a mesh."""
         if self.stitch_service is None:
-            return self._decode(self.params, cache, tok, **extra)
+            return self._jit_decode(cache, tok, extra)
         self._poll_stitch(cache, tok, extra)
         if self._use_stitched(cache, tok, extra):
             return self._stitch_decode(cache, tok, extra)
-        return self._decode(self.params, cache, tok, **extra)
+        return self._jit_decode(cache, tok, extra)
 
     # -- continuous batching ---------------------------------------------------
     @property
@@ -253,7 +357,7 @@ class Engine:
             if use_stitched:
                 logits, cache = self._stitch_decode(cache, tok, extra)
             else:
-                logits, cache = self._decode(self.params, cache, tok, **extra)
+                logits, cache = self._jit_decode(cache, tok, extra)
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         return np.concatenate(out, axis=1)
 

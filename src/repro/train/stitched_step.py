@@ -1,5 +1,5 @@
 """Stitched training step — the fusion pipeline applied to the backward pass
-and the optimizer phase.
+and the optimizer phase, on one device or over a whole mesh.
 
 Training is the paper's canonical memory-intensive workload: the backward
 pass of norms/softmax/cross-entropy and the AdamW+clip update are pure
@@ -28,6 +28,31 @@ fallback artifact (identical numerics), the full stitch pipeline runs on a
 background thread, and every later step polls the cache so the run upgrades
 to stitched plans mid-flight — mirroring the serving engine's behavior.
 
+Mesh-aware execution (``mesh=`` + forced host devices, or a real slice):
+both stitched phases dispatch through :func:`jax.experimental.shard_map`
+with *per-shard* graphs traced and solved at shard-local shapes, and their
+cache keys carry a mesh+PartitionSpec placement component so a plan solved
+at one mesh never replays at another:
+
+* the **backward** body sees the params gathered (``in_specs=P()``; params
+  may live TP-sharded at rest) and the batch rows split over every mesh
+  axis that divides them — the model axis moonlights as extra data
+  parallelism, since the shard-local body contains no TP collectives.  The
+  DP gradient/loss ``psum``-mean runs *outside* the stitched region, at the
+  tail of the shard_map body.
+* the **optimizer** body updates TP-shard-local parameter panels: the
+  packed kernel's operands are each shard's slice of the param/grad/moment
+  trees (the shard_map boundary does the slicing), with the global-norm
+  clip scale fed in as a scalar computed from the reduced full gradients
+  (``PackedAdamW(external_ssq=True)``).  New params come back TP-sharded;
+  opt moments stay co-located with their params (no ZeRO offset — the
+  panels must be shard-local slices of both).
+
+The consumed ``TrainState`` is donated by default (``donate=False`` opts
+out): the jit fallback uses ``donate_argnums`` and the stitched dispatch
+deletes the old params/moments once the update has been dispatched, so peak
+memory holds one copy of params+opt, not two.
+
 If tracing or compilation fails outright the step degrades to the plain
 jitted reference (status ``"error"``); a per-call shape drift (e.g. a
 last-partial batch) falls back to the jitted step for that call only.
@@ -35,11 +60,13 @@ last-partial batch) falls back to the jitted step for that call only.
 
 from __future__ import annotations
 
-import time
+import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.api import Model
 from repro.optim import adamw
@@ -57,22 +84,25 @@ def _avals(tree) -> tuple:
 class _TracedPhase:
     """One traced-and-compiled function with miss-then-upgrade polling."""
 
-    def __init__(self, fn, example_args, service, name: str):
+    def __init__(self, fn, example_args, service, name: str,
+                 placement: str = ""):
         from repro.cache.signature import compute_signature
         from repro.core.trace import trace_to_graph
 
         self.status = "error"
         self.graph = None
         self.compiled = None
+        self.placement = placement
         try:
             self.graph, self.names = trace_to_graph(fn, *example_args, name=name)
             self.out_tree = jax.tree_util.tree_structure(
                 jax.eval_shape(fn, *example_args))
             if self.out_tree.num_leaves != len(self.graph.outputs):
                 return                       # duplicated outputs: not executable
-            self.compiled, self.status = service.compile_or_fallback(self.graph)
+            self.compiled, self.status = service.compile_or_fallback(
+                self.graph, placement=placement)
             self.sig = compute_signature(self.graph)
-            self.compiler = service.compiler("stitch")
+            self.compiler = service.compiler("stitch", placement)
             self.service = service
             self.in_avals = _avals(example_args)
         except Exception:
@@ -97,7 +127,8 @@ class _TracedPhase:
         else:
             # re-kick if the background compile was deferred (worker cap) or
             # died — a training run must not serve the fallback forever
-            self.service.ensure_compiling(self.graph, sig=self.sig)
+            self.service.ensure_compiling(self.graph, sig=self.sig,
+                                          placement=self.placement)
 
     def run(self, *args):
         env = dict(zip(self.names, jax.tree_util.tree_leaves(args)))
@@ -119,11 +150,16 @@ class StitchedTrainStep:
     ``step(state, batch) -> (state, metrics)`` with identical numerics, the
     backward pass and the packed optimizer executing through stitched
     artifacts (upgrading from the XLA fallback as background compiles land).
+
+    With ``mesh`` (size > 1) both phases run under ``shard_map`` on
+    per-shard graphs — see the module docstring.  ``param_specs`` overrides
+    the TP rule table; ``donate=False`` keeps the consumed state alive.
     """
 
     def __init__(self, model: Model, opt_cfg: adamw.AdamWConfig,
                  microbatches: int = 1, service=None,
-                 rows: int = 8):
+                 rows: int = 8, mesh: Mesh | None = None,
+                 param_specs=None, donate: bool = True):
         if service is None:
             from repro.cache import CompilationService
             service = CompilationService()
@@ -132,15 +168,34 @@ class StitchedTrainStep:
         self.microbatches = microbatches
         self.service = service
         self.rows = rows
+        self.donate = donate
+        self.mesh = mesh if (mesh is not None and mesh.size > 1) else None
+        self.param_specs = None
+        if self.mesh is not None:
+            from repro.models.sharding import param_pspecs
+            self.param_specs = (param_specs if param_specs is not None else
+                                param_pspecs(model.abstract_params(),
+                                             model.cfg, self.mesh))
         self._grad_fn = make_loss_and_grad(model, microbatches)
         # reference step: full-jit fallback for trace failures / shape drift
-        self._jit_step = jax.jit(make_train_step(model, opt_cfg, microbatches))
+        # (donating, like the launcher's jit path; under a mesh it picks the
+        # sharded layout up from its operands via GSPMD)
+        self._jit_step = jax.jit(make_train_step(model, opt_cfg, microbatches),
+                                 donate_argnums=(0,) if donate else ())
+        self._prepared = False
         self._grad: _TracedPhase | None = None
         self._packed: PackedAdamW | None = None
+        self._grad_sm = None                 # shard_map'd backward dispatch
+        self._upd_sm = None                  # shard_map'd optimizer dispatch
+        self._global_avals = None            # sharded-path eligibility key
         self.fallback_steps = 0              # calls served by the jitted step
 
     # -- lazy preparation ------------------------------------------------------
     def _prepare(self, state: TrainState, batch) -> None:
+        self._prepared = True
+        if self.mesh is not None:
+            self._prepare_sharded(state, batch)
+            return
         self._grad = _TracedPhase(self._grad_fn, (state.params, batch),
                                   self.service, name="train_grad")
         try:
@@ -149,6 +204,98 @@ class StitchedTrainStep:
         except Exception:
             self._packed = None
 
+    def _prepare_sharded(self, state: TrainState, batch) -> None:
+        from repro.cache.signature import placement_key
+        from repro.models.sharding import (batch_shard_axes, local_avals)
+
+        mesh = self.mesh
+        self._global_avals = _avals((state.params, batch))
+        aparams = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), state.params)
+        pspecs = self.param_specs
+        B = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        axes = batch_shard_axes(mesh, B)
+        bspecs = jax.tree.map(
+            lambda l: P() if l.ndim == 0 else
+            P(*((axes if axes else None,) + (None,) * (l.ndim - 1))),
+            batch)
+        local_batch = local_avals(batch, bspecs, mesh)
+        B_local = jax.tree_util.tree_leaves(local_batch)[0].shape[0]
+        if self.microbatches > 1 and B_local % self.microbatches:
+            # shard-local rows don't split into microbatches: serve the
+            # sharded jit fallback rather than change the accumulation math
+            self._grad = None
+            self._packed = None
+            return
+        # backward: per-shard graph at (full params, shard-local batch)
+        grad_pl = placement_key(mesh, (P(), bspecs))
+        self._grad = _TracedPhase(self._grad_fn, (aparams, local_batch),
+                                  self.service, name="train_grad",
+                                  placement=grad_pl)
+        # optimizer: per-shard packed panels over TP-local param slices
+        try:
+            local_params = local_avals(aparams, pspecs, mesh)
+            self._packed = PackedAdamW(
+                self.opt_cfg, local_params, rows=self.rows,
+                service=self.service, external_ssq=True,
+                placement=placement_key(mesh, pspecs))
+        except Exception:
+            self._packed = None
+        if self._grad is None or not self._grad.ok or self._packed is None:
+            return
+
+        allax = tuple(mesh.axis_names)
+
+        def local_grad(params, b):
+            loss, aux, grads = self._grad.run(params, b)
+            # DP psum-mean OUTSIDE the stitched region: the executable above
+            # computed this shard's rows only
+            loss = jax.lax.pmean(loss, allax)
+            aux = jax.tree.map(lambda a: jax.lax.pmean(a, allax), aux)
+            grads = jax.tree.map(
+                lambda g: jax.lax.pmean(g.astype(jnp.float32), allax), grads)
+            return loss, aux, grads
+
+        self._grad_sm = shard_map(
+            local_grad, mesh=mesh, in_specs=(P(), bspecs),
+            out_specs=(P(), P(), P()), check_rep=False)
+
+        def local_update(params, grads, m, v, lr, b1c, b2c, gss):
+            return self._packed.update_local(params, grads, m, v,
+                                             lr, b1c, b2c, gss=gss)
+
+        sc = P()
+        self._upd_sm = shard_map(
+            local_update, mesh=mesh,
+            in_specs=(pspecs, pspecs, pspecs, pspecs, sc, sc, sc, sc),
+            out_specs=(pspecs, pspecs, pspecs, sc), check_rep=False)
+
+    # -- mesh placement for the launcher --------------------------------------
+    def state_shardings(self) -> TrainState:
+        """NamedSharding placement for the ``TrainState`` this step expects:
+        params TP-sharded per the rule table, opt m/v co-located with their
+        params (the packed panels update shard-local slices of both — a
+        ZeRO offset would misalign them), count/step replicated."""
+        assert self.mesh is not None, "state_shardings requires a mesh"
+        sh = lambda s: NamedSharding(self.mesh, s)
+        pshard = jax.tree.map(sh, self.param_specs,
+                              is_leaf=lambda x: isinstance(x, P))
+        return TrainState(
+            params=pshard,
+            opt=adamw.AdamWState(m=pshard, v=pshard, count=sh(P())),
+            step=sh(P()))
+
+    # -- donation --------------------------------------------------------------
+    def _delete_consumed(self, state: TrainState) -> None:
+        """Free the old params and moments once the update is dispatched —
+        the stitched analogue of the jit path's ``donate_argnums=(0,)``.
+        Without it the consumed state stays alive across the step and peak
+        memory holds params+opt twice."""
+        for leaf in jax.tree_util.tree_leaves(
+                (state.params, state.opt.m, state.opt.v)):
+            if isinstance(leaf, jax.Array) and not leaf.is_deleted():
+                leaf.delete()
+
     # -- observability --------------------------------------------------------
     def report(self) -> dict:
         out: dict[str, Any] = {
@@ -156,6 +303,8 @@ class StitchedTrainStep:
             "optimizer": self._packed.report() if self._packed else {"status": None},
             "fallback_steps": self.fallback_steps,
         }
+        if self.mesh is not None:
+            out["mesh"] = dict(self.mesh.shape)
         if self._grad is not None and self._grad.plan_stats() is not None:
             out["grad"]["plan"] = self._grad.plan_stats()
         if self.service is not None:
@@ -165,8 +314,10 @@ class StitchedTrainStep:
 
     # -- the step --------------------------------------------------------------
     def __call__(self, state: TrainState, batch) -> tuple[TrainState, dict]:
-        if self._grad is None:
+        if not self._prepared:
             self._prepare(state, batch)
+        if self.mesh is not None:
+            return self._call_sharded(state, batch)
         grad_ok = self._grad.eligible((state.params, batch))
         if not grad_ok or self._packed is None:
             self.fallback_steps += 1
@@ -176,7 +327,43 @@ class StitchedTrainStep:
         new_params, new_opt, opt_metrics = self._packed.update(
             grads, state.opt, state.params)
         metrics = {"loss": loss, "step": state.step + 1, **opt_metrics, **aux}
-        return TrainState(new_params, new_opt, state.step + 1), metrics
+        out = TrainState(new_params, new_opt, state.step + 1), metrics
+        if self.donate:
+            self._delete_consumed(state)
+        return out
+
+    def _call_sharded(self, state: TrainState, batch) -> tuple[TrainState, dict]:
+        ok = (self._grad is not None and self._grad.ok
+              and self._packed is not None and self._upd_sm is not None
+              and _avals((state.params, batch)) == self._global_avals)
+        if not ok:
+            self.fallback_steps += 1
+            return self._jit_step(state, batch)
+        self._grad.poll_upgrade()
+        self._packed.poll_upgrade()
+        loss, aux, grads = self._grad_sm(state.params, batch)
+        cfg = self.opt_cfg
+        count = state.opt.count + 1
+        lr = adamw.schedule(cfg, count)
+        cf = count.astype(jnp.float32)
+        b1c = 1 - cfg.b1 ** cf
+        b2c = 1 - cfg.b2 ** cf
+        # global clip scale from the reduced full grads — replicated, so
+        # every shard's packed kernel sees the same scalar
+        gss = functools.reduce(
+            jnp.add, [jnp.sum(jnp.square(g))
+                      for g in jax.tree_util.tree_leaves(grads)])
+        new_p, new_m, new_v, gnorm = self._upd_sm(
+            state.params, grads, state.opt.m, state.opt.v,
+            jnp.asarray(lr, jnp.float32), jnp.asarray(b1c, jnp.float32),
+            jnp.asarray(b2c, jnp.float32), gss)
+        metrics = {"loss": loss, "step": state.step + 1, "grad_norm": gnorm,
+                   "lr": lr, **aux}
+        out = (TrainState(new_p, adamw.AdamWState(new_m, new_v, count),
+                          state.step + 1), metrics)
+        if self.donate:
+            self._delete_consumed(state)
+        return out
 
     # -- orderly shutdown ------------------------------------------------------
     def wait(self, timeout: float | None = None) -> None:

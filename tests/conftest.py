@@ -1,3 +1,12 @@
+# The tier-1 suite runs against a forced 8-device host platform so the
+# sharded-stitching equality tests exercise a real (4, 2) mesh in CI and
+# locally without extra flags.  Must happen before the first jax import —
+# jax locks the device count at first init.  An operator-provided count
+# (XLA_FLAGS already set) is respected; hostenv itself is jax-free.
+from repro.launch.hostenv import force_host_devices
+
+force_host_devices(8)
+
 import numpy as np
 import pytest
 

@@ -193,8 +193,9 @@ def test_memory_lru_eviction():
     for i in range(3):
         ms.put(_dummy_record(i))
     assert len(ms) == 2 and ms.evictions == 1
-    assert ms.get(("g0", "b", "stitch", "TPU_V5E")) is None   # oldest evicted
-    assert ms.get(("g2", "b", "stitch", "TPU_V5E")) is not None
+    # keys carry the placement component ("" = single-device) since v2
+    assert ms.get(("g0", "b", "stitch", "TPU_V5E", "")) is None   # evicted
+    assert ms.get(("g2", "b", "stitch", "TPU_V5E", "")) is not None
 
 
 def test_disk_roundtrip_replay_matches_fresh_compile(tmp_path, rng):

@@ -208,3 +208,81 @@ def test_check_regression_gate():
     missing = {"workloads": {"wl_a": base["workloads"]["wl_a"]}}
     failures, _ = compare(base, missing)
     assert any("missing" in f for f in failures)
+
+
+def test_check_regression_gates_serving_throughput_both_directions():
+    """Direction-aware serving gate: tokens_per_sec is higher-is-better —
+    a >10% drop fails, an improvement (or small wobble) passes."""
+    from benchmarks.check_regression import compare
+    base = {"workloads": {},
+            "serving": {"continuous": {"tokens_per_sec": 2000.0},
+                        "static": {"tokens_per_sec": 1500.0}}}
+
+    dropped = {"workloads": {},
+               "serving": {"continuous": {"tokens_per_sec": 1700.0},  # -15%
+                           "static": {"tokens_per_sec": 1500.0}}}
+    failures, _ = compare(base, dropped)
+    assert len(failures) == 1 and "drop" in failures[0]
+    assert "continuous_tokens_per_sec" in failures[0]
+
+    improved = {"workloads": {},
+                "serving": {"continuous": {"tokens_per_sec": 2600.0},  # +30%
+                            "static": {"tokens_per_sec": 1460.0}}}     # -2.7%
+    failures, _ = compare(base, improved)
+    assert failures == []
+
+    # a faster-is-worse direction mixup would let this regress silently:
+    # the same +15% that fails a lower-is-better metric must PASS here
+    faster = {"workloads": {},
+              "serving": {"continuous": {"tokens_per_sec": 2300.0},
+                          "static": {"tokens_per_sec": 1725.0}}}
+    failures, _ = compare(base, faster)
+    assert failures == []
+
+    # lost section = lost coverage
+    failures, _ = compare(base, {"workloads": {}})
+    assert any("serving" in f and "missing" in f for f in failures)
+
+    # serving_tolerance widens ONLY the wall-clock serving gate (CI runs
+    # against a baseline recorded on different hardware); the default
+    # tolerance still governs every deterministic metric
+    failures, _ = compare(base, dropped, serving_tolerance=0.5)
+    assert failures == []
+    mixed = {"workloads": {
+        "wl": {"kernels": {"stitch": 12},                  # +20% kernels
+               "modeled_time_s": {"stitch": 1e-3}}}}
+    base_mixed = {"workloads": {
+        "wl": {"kernels": {"stitch": 10},
+               "modeled_time_s": {"stitch": 1e-3}}},
+        "serving": base["serving"]}
+    failures, _ = compare(base_mixed, {**mixed, "serving": dropped["serving"]},
+                          serving_tolerance=0.5)
+    assert len(failures) == 1 and "stitched_kernels" in failures[0]
+
+
+def test_check_regression_gates_sharding_section():
+    """Sharded metrics: per-shard kernel counts gate lower-is-better, the
+    mesh-keyed entry count gates exactly."""
+    from benchmarks.check_regression import compare
+    base = {"workloads": {},
+            "sharding": {
+                "grad_local": {"kernels": {"stitch": 40},
+                               "modeled_time_s": {"stitch": 1e-4}},
+                "packed_local": {"kernels": {"stitch": 1}},
+                "cache": {"mesh_keyed_entries": 2}}}
+    same = {"workloads": {}, "sharding": {
+        "grad_local": {"kernels": {"stitch": 41},          # +2.5%: fine
+                       "modeled_time_s": {"stitch": 1.05e-4}},
+        "packed_local": {"kernels": {"stitch": 1}},
+        "cache": {"mesh_keyed_entries": 2}}}
+    failures, _ = compare(base, same)
+    assert failures == []
+
+    worse = {"workloads": {}, "sharding": {
+        "grad_local": {"kernels": {"stitch": 50},          # +25%
+                       "modeled_time_s": {"stitch": 1e-4}},
+        "packed_local": {"kernels": {"stitch": 2}},        # +100%
+        "cache": {"mesh_keyed_entries": 1}}}               # placements merged
+    failures, _ = compare(base, worse)
+    assert len(failures) == 3
+    assert any("mesh_keyed_entries" in f and "exactly" in f for f in failures)

@@ -146,6 +146,36 @@ def test_stitched_step_shape_drift_falls_back(model, opt_cfg):
     assert int(s.step) == 3
 
 
+def test_stitched_step_donates_consumed_state(model, opt_cfg):
+    """The stitched dispatch must not keep the consumed TrainState alive
+    (the jit path donates via donate_argnums; without the matching delete
+    the stitched path holds params+opt twice at peak).  Buffer count: every
+    old params/m/v leaf is deleted, every new one alive."""
+    vocab = model.cfg.vocab
+    st = StitchedTrainStep(model, opt_cfg,
+                           service=CompilationService(max_background=0))
+    s0 = init_state(model, jax.random.PRNGKey(3))
+    old = jax.tree_util.tree_leaves((s0.params, s0.opt.m, s0.opt.v))
+    s1, _ = st(s0, make_batch(vocab, 0))
+    assert st.fallback_steps == 0            # the stitched dispatch ran
+    assert sum(l.is_deleted() for l in old) == len(old)
+    new = jax.tree_util.tree_leaves((s1.params, s1.opt.m, s1.opt.v))
+    assert not any(l.is_deleted() for l in new)
+    # and the next step still works off the new state
+    s2, m = st(s1, make_batch(vocab, 1))
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_stitched_step_donate_false_keeps_state(model, opt_cfg):
+    vocab = model.cfg.vocab
+    st = StitchedTrainStep(model, opt_cfg, donate=False,
+                           service=CompilationService(max_background=0))
+    s0 = init_state(model, jax.random.PRNGKey(5))
+    old = jax.tree_util.tree_leaves((s0.params, s0.opt.m, s0.opt.v))
+    st(s0, make_batch(vocab, 0))
+    assert not any(l.is_deleted() for l in old)
+
+
 # ---------------------------------------------------------------------------
 # packed multi-tensor AdamW
 # ---------------------------------------------------------------------------
