@@ -276,6 +276,7 @@ class CompilationService:
         gen_cfg=None,
         use_pallas: bool = True,
         max_background: int = 2,
+        plan_budget: float | None = None,
     ):
         assert fallback_mode in ("off", "xla")
         self.cache = cache or StitchCache()
@@ -284,10 +285,15 @@ class CompilationService:
         self.gen_cfg = gen_cfg
         self.use_pallas = use_pallas
         self.max_background = max_background
+        # wall-clock budget (seconds) for the fusion-plan ILP of every
+        # compile this service spawns — see core.ilp's anytime mode; None
+        # means solve to optimality
+        self.plan_budget = plan_budget
         self._lock = threading.Lock()
         self._pending: set[tuple] = set()
         self._threads: list[threading.Thread] = []
         self.last_error: str | None = None   # last background-compile failure
+        self.errors: dict[tuple, str] = {}   # per-key background failures
 
     def compiler(self, mode: str, placement: str = "") -> StitchCompiler:
         return StitchCompiler(
@@ -297,7 +303,16 @@ class CompilationService:
             use_pallas=self.use_pallas,
             cache=self.cache if mode == "stitch" else None,
             placement=placement,
+            plan_budget=self.plan_budget,
         )
+
+    def error_for(self, sig: GraphSignature, placement: str = "") -> str | None:
+        """The recorded background-compile failure for this graph's stitch
+        key, or None.  Engines poll it so a doomed compile is surfaced
+        (warn-once + report) instead of silently serving the fallback."""
+        key = self.cache.key_for(sig, "stitch", self.hw.name, placement)
+        with self._lock:
+            return self.errors.get(key)
 
     def compile(self, g: Graph, placement: str = "") -> CompiledGraph:
         """Blocking cache-aware full compile (offline / warmup path)."""
@@ -329,14 +344,19 @@ class CompilationService:
                          placement: str = "") -> bool:
         """Kick the background stitch compile for ``g`` unless one is already
         in flight for its key.  Returns True when a new compile was spawned.
-        A dropped request (worker cap hit on a cold-start burst, or an
-        earlier compile that raised) is re-kicked by calling this again;
-        engines poll it while still un-upgraded."""
+        A request deferred by the worker cap (cold-start burst) is re-kicked
+        by calling this again; a key whose compile *failed* is never retried
+        — the failure is recorded in ``errors`` and callers surface it via
+        :meth:`error_for`."""
         sig = sig or compute_signature(g)
         key = self.cache.key_for(sig, "stitch", self.hw.name, placement)
         with self._lock:
             self._threads = [x for x in self._threads if x.is_alive()]
             if key in self._pending:
+                return False
+            if key in self.errors:
+                # this key's compile already failed: re-running it would fail
+                # the same way forever — callers surface it via error_for()
                 return False
             if len(self._threads) >= self.max_background:
                 # bounded worker count: don't stack N ILP+tuning pipelines on
@@ -351,6 +371,7 @@ class CompilationService:
             except Exception as e:          # surfaced via last_error / report
                 with self._lock:
                     self.last_error = f"{type(e).__name__}: {e}"
+                    self.errors[key] = self.last_error
             finally:
                 with self._lock:
                     self._pending.discard(key)

@@ -14,7 +14,7 @@ Public surface:
 from .compiler import CompiledGraph, FusionStats, StitchCompiler, xla_like_groups
 from .cost import CostModel, HardwareModel, TPU_V5E, V100
 from .fusiongen import GenConfig, exploratory_fusion, generate_patterns, multi_step_substitution, substitution_fusion
-from .ilp import ILPSolver, PlanResult, solve_fusion_plan
+from .ilp import ILPSolver, PlanResult, greedy_fusion_plan, solve_fusion_plan
 from .ir import Graph, GraphBuilder, OpKind, OpNode, ReduceKind
 from .pattern import FusionPattern, PatternClass, contraction_creates_cycle
 from .scratch import ScratchAllocator, ScratchPlan, dominator_tree, post_dominates
@@ -28,7 +28,7 @@ __all__ = [
     "GenConfig", "generate_patterns", "substitution_fusion",
     "multi_step_substitution", "exploratory_fusion",
     "CostModel", "HardwareModel", "TPU_V5E", "V100",
-    "ILPSolver", "PlanResult", "solve_fusion_plan",
+    "ILPSolver", "PlanResult", "solve_fusion_plan", "greedy_fusion_plan",
     "Template", "parse_template",
     "ScratchAllocator", "ScratchPlan", "dominator_tree", "post_dominates",
     "TemplateTuner", "TunedKernel", "generate_templates",

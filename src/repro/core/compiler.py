@@ -206,11 +206,15 @@ class StitchCompiler:
         use_pallas: bool = True,
         cache=None,
         placement: str = "",
+        plan_budget: float | None = None,
     ):
         assert mode in ("off", "xla", "stitch")
         self.hw = hw
         self.mode = mode
         self.gen_cfg = gen_cfg or GenConfig()
+        # anytime ILP: wall-clock seconds before the fusion-plan solve
+        # degrades to the greedy heuristic (None = solve to optimality)
+        self.plan_budget = plan_budget
         self.cost = CostModel(hw)
         self.tuner = TemplateTuner(hw, execution_based=execution_based_eval)
         self.use_pallas = use_pallas
@@ -237,7 +241,8 @@ class StitchCompiler:
             return pats, None
         patterns = generate_patterns(g, self.gen_cfg)
         scores = [self.cost.score(p).score for p in patterns]
-        result = solve_fusion_plan(g, patterns, scores)
+        result = solve_fusion_plan(g, patterns, scores,
+                                   budget_seconds=self.plan_budget)
         return result.chosen, result
 
     # -- modeled whole-graph time (Table 3's perf metric) ----------------------

@@ -19,12 +19,13 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import time
 from dataclasses import dataclass, field
 
 from .ir import Graph
 from .pattern import FusionPattern
 
-__all__ = ["ILPSolver", "solve_fusion_plan", "PlanResult"]
+__all__ = ["ILPSolver", "solve_fusion_plan", "greedy_fusion_plan", "PlanResult"]
 
 
 @dataclass
@@ -34,17 +35,27 @@ class PlanResult:
     iterations: int          # number of solve rounds (1 + cycle-cut rounds)
     cuts_added: int
     nodes_explored: int
+    method: str = "ilp"      # "ilp" | "greedy" (anytime budget expired)
+    budget_expired: bool = False
 
 
 class ILPSolver:
     """Exact best-first branch & bound for weighted set packing with
-    arbitrary 'at most k-1 of this set' cut constraints."""
+    arbitrary 'at most k-1 of this set' cut constraints.
 
-    def __init__(self, weights: list[float], overlaps: list[set[int]], node_budget: int = 200_000):
+    ``deadline`` (a ``time.monotonic`` instant) makes the solve *anytime*:
+    on expiry it returns the best feasible selection found so far and sets
+    ``budget_expired`` — a huge backward graph can never hang the caller.
+    """
+
+    def __init__(self, weights: list[float], overlaps: list[set[int]],
+                 node_budget: int = 200_000, deadline: float | None = None):
         self.w = weights
         self.overlaps = overlaps          # overlaps[i] = set of j conflicting with i
         self.cuts: list[frozenset[int]] = []
         self.node_budget = node_budget
+        self.deadline = deadline
+        self.budget_expired = False
         self.nodes_explored = 0
 
     def add_cut(self, idxs: frozenset[int]) -> None:
@@ -72,6 +83,10 @@ class ILPSolver:
             self.nodes_explored += 1
             if self.nodes_explored > self.node_budget:
                 break  # return best found so far (budget guard; tested small)
+            if (self.deadline is not None and self.nodes_explored % 256 == 0
+                    and time.monotonic() > self.deadline):
+                self.budget_expired = True
+                break  # anytime: best-so-far under the wall-clock budget
             if val > best_val:
                 best_val, best_sel = val, sorted(chosen)
             if pos >= n or val + suffix[pos] <= best_val:
@@ -161,14 +176,51 @@ def _find_cycle_patterns(g: Graph, chosen: list[FusionPattern]) -> frozenset[int
     return None
 
 
+def greedy_fusion_plan(
+    g: Graph,
+    pats: list[FusionPattern],
+    w: list[float],
+    overlaps: list[set[int]],
+) -> tuple[list[FusionPattern], float]:
+    """The paper's §4 greedy heuristic: take patterns in descending score
+    order, skipping overlaps, then repair cycles by dropping the cheapest
+    pattern of each detected cycle.  Used as the anytime fallback when the
+    ILP's wall-clock budget expires — always valid, usually near-optimal."""
+    chosen_idx: list[int] = []
+    blocked: set[int] = set()
+    for i in sorted(range(len(w)), key=lambda i: -w[i]):
+        if w[i] <= 0 or i in blocked:
+            continue
+        chosen_idx.append(i)
+        blocked |= overlaps[i]
+    while True:
+        cyc = _find_cycle_patterns(g, [pats[i] for i in chosen_idx])
+        if cyc is None:
+            break
+        drop = min(cyc, key=lambda k: w[chosen_idx[k]])
+        chosen_idx.pop(drop)
+    return [pats[i] for i in chosen_idx], sum(w[i] for i in chosen_idx)
+
+
 def solve_fusion_plan(
     g: Graph,
     patterns: list[FusionPattern],
     scores: list[float],
     max_cycle_rounds: int = 50,
+    budget_seconds: float | None = None,
 ) -> PlanResult:
-    """The paper's full loop: ILP -> cycle check -> add cut -> re-solve."""
+    """The paper's full loop: ILP -> cycle check -> add cut -> re-solve.
+
+    ``budget_seconds`` makes the whole loop *anytime*: when the wall-clock
+    budget expires (inside a branch-and-bound solve or between cycle-cut
+    rounds), the greedy §4 heuristic produces the plan instead, recorded in
+    the returned :class:`PlanResult` (``method="greedy"``,
+    ``budget_expired=True``) so callers and cache records can tell an
+    optimal plan from a budgeted one.
+    """
     assert len(patterns) == len(scores)
+    deadline = (None if budget_seconds is None
+                else time.monotonic() + budget_seconds)
     keep = [i for i, s in enumerate(scores) if s > 0]
     pats = [patterns[i] for i in keep]
     w = [scores[i] for i in keep]
@@ -179,10 +231,19 @@ def solve_fusion_plan(
             overlaps[i].add(j)
             overlaps[j].add(i)
 
-    solver = ILPSolver(w, overlaps)
+    def greedy(rounds: int, cuts: int, nodes: int) -> PlanResult:
+        chosen, val = greedy_fusion_plan(g, pats, w, overlaps)
+        return PlanResult(chosen, val, rounds, cuts, nodes,
+                          method="greedy", budget_expired=True)
+
+    solver = ILPSolver(w, overlaps, deadline=deadline)
     cuts = 0
     for rounds in range(1, max_cycle_rounds + 1):
+        if deadline is not None and time.monotonic() > deadline:
+            return greedy(rounds, cuts, solver.nodes_explored)
         sel, val = solver.solve()
+        if solver.budget_expired:
+            return greedy(rounds, cuts, solver.nodes_explored)
         chosen = [pats[i] for i in sel]
         cyc = _find_cycle_patterns(g, chosen)
         if cyc is None:

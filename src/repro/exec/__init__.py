@@ -1,0 +1,12 @@
+"""repro.exec — the one stitched-execution layer.
+
+:func:`stitch` is the public, jit-like transform: wrap any JAX function and
+it executes through the FusionStitching pipeline (trace -> cached fusion
+plan -> stitched kernels) with miss-then-upgrade compilation, single-device
+or ``shard_map`` dispatch, and jit fallback on trace failure or shape drift.
+Training, serving, and the packed optimizer are all built on it.
+"""
+
+from .function import StitchedFunction, shard_wrap, stitch, tree_avals
+
+__all__ = ["StitchedFunction", "shard_wrap", "stitch", "tree_avals"]

@@ -53,7 +53,8 @@ def build_engine(args, cfg, model, params):
     svc = None
     if args.stitch:
         from repro.cache import CompilationService, StitchCache
-        svc = CompilationService(StitchCache(directory=args.cache_dir))
+        svc = CompilationService(StitchCache(directory=args.cache_dir),
+                                 plan_budget=args.plan_budget)
     # DP-replica dispatch is opt-in (--mesh, implied by --model-parallel>1):
     # a multi-device host with the default slot count must not change
     # behavior or hit the slots-divisibility check uninvited
@@ -154,6 +155,10 @@ def main():
                          "(miss-then-upgrade)")
     ap.add_argument("--cache-dir", default=None,
                     help="persistent StitchCache directory (with --stitch)")
+    ap.add_argument("--plan-budget", type=float, default=None,
+                    help="wall-clock seconds the fusion-plan ILP may spend "
+                         "per graph before degrading to the greedy heuristic "
+                         "(anytime solve; keeps background upgrades bounded)")
     ap.add_argument("--model-parallel", type=int, default=1,
                     help="model-axis size of the host mesh (must divide the "
                          "device count); >1 implies --mesh")

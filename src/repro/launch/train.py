@@ -75,6 +75,11 @@ def main():
     ap.add_argument("--cache-dir", default=None,
                     help="StitchCache directory (fusion plans persist and "
                          "replay across runs)")
+    ap.add_argument("--plan-budget", type=float, default=None,
+                    help="wall-clock seconds the fusion-plan ILP may spend "
+                         "per graph before degrading to the greedy heuristic "
+                         "(anytime solve; a huge backward graph can never "
+                         "hang a background upgrade thread)")
     ap.add_argument("--host-devices", type=int, default=None,
                     help="force N host-platform devices (must be first-"
                          "parsed before jax init; see module docstring)")
@@ -109,7 +114,8 @@ def main():
         # per-shard graphs (mesh-keyed cache entries).
         from repro.cache import CompilationService, StitchCache
         from repro.train import StitchedTrainStep
-        svc = CompilationService(cache=StitchCache(args.cache_dir))
+        svc = CompilationService(cache=StitchCache(args.cache_dir),
+                                 plan_budget=args.plan_budget)
         stitched = StitchedTrainStep(model, opt_cfg,
                                      microbatches=args.microbatches,
                                      service=svc, mesh=mesh,

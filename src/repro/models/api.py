@@ -27,6 +27,19 @@ class Model:
     prefill: Callable[..., tuple]                 # (params, **inputs) -> (logits, cache)
     decode_step: Callable[..., tuple] | None      # (params, cache, tokens, **extra)
     init_cache: Callable[[int, int], Params] | None
+    # single-block forward (layer_params, x) -> x': the function-level entry
+    # point for repro.exec.stitch() — lets any block be stitched standalone
+    # without flowing through the train or serve machinery (see
+    # examples/stitch_fn.py).  None for families without a pure block form.
+    block_fn: Callable[..., Any] | None = None
+
+    def layer_params(self, params: Params, index: int = 0) -> Params:
+        """Slice one layer's params out of the stacked ``layers`` tree —
+        the ``block_fn`` operand for layer ``index``."""
+        if "layers" not in params:
+            raise ValueError(f"{self.cfg.family!r} params carry no stacked "
+                             f"'layers' tree")
+        return jax.tree.map(lambda l: l[index], params["layers"])
 
     # -- dry-run input specs --------------------------------------------------
     def input_specs(self, shape: ShapeConfig) -> dict[str, Any]:
@@ -81,6 +94,7 @@ def build_model(cfg: ModelConfig) -> Model:
             decode_step=lambda p, cache, tokens, **kw: mamba.decode_step(
                 p, cache, tokens, cfg),
             init_cache=lambda b, s: mamba.init_cache(cfg, b, s),
+            block_fn=lambda lp, x: mamba._block(lp, x, cfg),
         )
     if cfg.family == "hybrid":
         return Model(
@@ -91,6 +105,7 @@ def build_model(cfg: ModelConfig) -> Model:
             decode_step=lambda p, cache, tokens, **kw: griffin.decode_step(
                 p, cache, tokens, cfg),
             init_cache=lambda b, s: griffin.init_cache(cfg, b, s),
+            block_fn=lambda lp, x: griffin._rec_block(lp, x, cfg),
         )
     if cfg.family == "audio":
         def _train(p, batch):

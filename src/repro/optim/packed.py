@@ -21,14 +21,15 @@ Mechanism
   the per-leaf sum-of-squares reductions are cross-row accumulators feeding
   the shared clip scale, which is the emitter's grid==1 block-composition
   path (§5.3 layout constraint).
-* :class:`PackedAdamW` traces that function through
-  :func:`repro.core.trace.trace_to_graph` and compiles it with the stitch
-  pipeline.  The substitution search collapses the entire update into ONE
-  fusion pattern (there are no partition ops), so the compiled artifact is a
-  single packed Pallas kernel covering clip + m/v moments + decay + step for
-  every tensor.  With a :class:`repro.cache.CompilationService` the compile
-  is miss-then-upgrade: step 0 runs the XLA-mode fallback artifact (same
-  numerics), later steps replay the cached packed plan.
+* :class:`PackedAdamW` wraps that function with :func:`repro.exec.stitch`
+  — the shared execution layer owns tracing, compile-or-fallback, and
+  miss-then-upgrade polling.  The substitution search collapses the entire
+  update into ONE fusion pattern (there are no partition ops), so the
+  compiled artifact is a single packed Pallas kernel covering clip + m/v
+  moments + decay + step for every tensor.  With a
+  :class:`repro.cache.CompilationService` the compile is miss-then-upgrade:
+  step 0 runs the XLA-mode fallback artifact (same numerics), later steps
+  replay the cached packed plan.
 
 Scheduling scalars (lr, bias corrections) are computed outside the kernel —
 they are O(1) flops on the step counter; the kernel takes them as scalar
@@ -45,9 +46,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compiler import CompiledGraph, StitchCompiler
-from repro.core.ir import Graph
-from repro.core.trace import trace_to_graph
+from repro.core.compiler import StitchCompiler
+from repro.exec import stitch
 
 from . import adamw
 
@@ -176,7 +176,6 @@ class PackedAdamW:
         self.cfg = cfg
         self.layout = make_layout(params, rows=rows)
         self.service = service
-        self.status: str | None = None
         self.external_ssq = external_ssq
         self.placement = placement
         self._fn = packed_update_fn(cfg, external_ssq=external_ssq)
@@ -198,70 +197,69 @@ class PackedAdamW:
             for _ in range(4)
         ) + (jnp.zeros((), f32),) * (4 if external_ssq else 3)
         self._example = example
-        self.graph: Graph | None = None
-        self._names: list[str] | None = None
-        self._out_tree = None
-        self._compiled: CompiledGraph | None = None
-        self._sig = None
-        self._lookup_compiler = None
+        self._exec = None
         if not use_compiler:
-            self.status = "jnp"
             return
-        self.graph, self._names = trace_to_graph(
-            self._fn, *example, name="packed_adamw")
-        self._out_tree = jax.tree_util.tree_structure(
-            jax.eval_shape(self._fn, *example))
-        if service is not None:
-            from repro.cache.signature import compute_signature
-            self._compiled, self.status = service.compile_or_fallback(
-                self.graph, placement=placement)
-            self._sig = compute_signature(self.graph)
-            self._lookup_compiler = service.compiler("stitch", placement)
-        else:
-            compiler = compiler or StitchCompiler(mode="stitch",
-                                                  placement=placement)
-            self._compiled = compiler.compile(self.graph)
-            self.status = "compiled"
+        # all execution flows through the shared layer: "stitch" mode is the
+        # miss-then-upgrade service path, "offline" blocks at trace time
+        # (the legacy explicit-compiler path maps onto a one-off service)
+        mode = "stitch" if service is not None else "offline"
+        if service is None and compiler is not None:
+            from repro.cache import CompilationService
+            service = CompilationService(hw=compiler.hw,
+                                         gen_cfg=compiler.gen_cfg,
+                                         use_pallas=compiler.use_pallas)
+        self._exec = stitch(self._fn, mode=mode, service=service,
+                            placement=placement, name="packed_adamw")
+        status = self._exec.warmup(*example)
+        if status == "error":
+            raise RuntimeError(
+                f"packed AdamW trace/compile failed: "
+                f"{self._exec.report().get('error')}")
 
     # -- observability --------------------------------------------------------
     @property
+    def status(self) -> str | None:
+        """jnp (no compiler) | compiled (offline) | hit/miss/pending/failed."""
+        return self._exec.status if self._exec is not None else "jnp"
+
+    @property
+    def graph(self):
+        return self._exec.graph if self._exec is not None else None
+
+    @property
+    def _compiled(self):
+        return self._exec.compiled if self._exec is not None else None
+
+    @property
     def kernel_count(self) -> int | None:
         """Kernels the whole AdamW+clip update dispatches (1 when packed)."""
-        return self._compiled.stats.n_kernels if self._compiled else None
+        c = self._compiled
+        return c.stats.n_kernels if c is not None else None
 
     def report(self) -> dict:
         out: dict[str, Any] = {"status": self.status,
                                "n_leaves": self.layout.n_leaves,
                                "rows": self.layout.rows}
-        if self._compiled is not None:
-            s = self._compiled.stats
-            out["plan"] = {"mode": s.mode, "n_kernels": s.n_kernels,
-                           "n_ops": s.n_ops, "pallas_groups": s.pallas_groups,
-                           "modeled_time": s.modeled_time,
-                           "cache_status": s.cache_status}
+        if self._exec is not None:
+            plan = self._exec.plan_stats()
+            if plan is not None:
+                out["plan"] = plan
+            rep = self._exec.report()
+            if "error" in rep:
+                out["error"] = rep["error"]
         return out
 
     # -- miss-then-upgrade polling --------------------------------------------
     def poll_upgrade(self) -> None:
-        if self.service is None or self.status not in ("miss", "pending"):
-            return
-        hit = self.service.cache.lookup(
-            self.graph, self._lookup_compiler, sig=self._sig, count=False)
-        if hit is not None:
-            self._compiled = hit
-            self.status = "hit"
-        else:
-            self.service.ensure_compiling(self.graph, sig=self._sig,
-                                          placement=self.placement)
+        if self._exec is not None:
+            self._exec.poll_upgrade()
 
     # -- the update ------------------------------------------------------------
     def _run(self, *args):
-        if self._compiled is None:           # pure-jnp path
+        if self._exec is None:               # pure-jnp path
             return self._fn(*args)
-        env = dict(zip(self._names, jax.tree_util.tree_leaves(args)))
-        outs = self._compiled(env)
-        flat = [outs[o] for o in self.graph.outputs]
-        return jax.tree_util.tree_unflatten(self._out_tree, flat)
+        return self._exec(*args)
 
     def update_local(self, params, grads, m, v, lr, b1c, b2c, gss=None):
         """Pure shard-local update over this layout's panels (no polling, no

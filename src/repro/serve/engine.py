@@ -14,48 +14,39 @@ Two serving modes share this engine:
   decode, evicts slots on EOS / max-token completion and refills them
   immediately, so one long request never stalls the batch.
 
-Fusion-stitching integration (miss-then-upgrade): when constructed with a
-:class:`repro.cache.CompilationService`, the engine traces the decode step
-to StitchIR on first use and asks the service for an executable.  A cache
-hit replays the stored fusion plan instantly; a miss returns the cheap
-XLA-mode fallback *immediately* while the full stitch pipeline (pattern
-generation, ILP, tuning) runs on a background thread and populates the
-cache — the engine upgrades to the stitched plan on a later ``generate``
-call, so no request ever waits on the tuner.  Decoding executes through the
-stitched artifact only when ``ServeConfig.stitch_execute`` is set (the
-interpret-mode reference path); otherwise the jitted step keeps serving and
-the stitched plan powers kernel-count/step-time reporting and cache warmth.
+Both modes decode through ONE :func:`repro.exec.stitch`-produced step.
+The execution layer owns everything the engine used to hand-roll: tracing
+the decode step to StitchIR on first use, compile-or-fallback through the
+:class:`repro.cache.CompilationService` (a cache hit replays the stored
+fusion plan instantly; a miss serves the cheap XLA-mode fallback while the
+stitch pipeline runs on a background thread), per-call upgrade polling (so
+a continuous request stream upgrades mid-flight), shape/structure-drift
+fallback to jit, and — with ``mesh=`` — DP-replica ``shard_map`` dispatch:
+the slot dimension is sharded over the mesh's data-parallel axes for both
+the jitted and the stitched decode, with the stitched executable traced and
+solved at *shard-local* shapes under a mesh-keyed placement.  Admission
+prefills stay per-request (B=1) and unsharded.
 
-DP-replica dispatch (``mesh=``): the slot dimension of the batched decode
-step is sharded over the mesh's data-parallel axes (the whole mesh when the
-slot count divides it), so the continuous-batching scheduler's one batched
-step per iteration spreads its slots across replicas — each replica decodes
-its slice of the slots against its slice of the KV cache, with the params
-gathered in-body (they may live TP-sharded at rest).  Both the jitted and
-the stitched decode route through ``shard_map``; the stitched executable is
-traced and solved at *shard-local* shapes and cached under a mesh-keyed
-placement.  Admission prefills stay per-request (B=1) and unsharded.
+``ServeConfig.stitch_execute`` selects the exec mode: ``True`` decodes
+through the stitched artifact (``"stitch"``); ``False`` keeps the jitted
+step serving while the stitched plan powers reporting and cache warmth
+(``"shadow"``); no service at all is pure (sharded) jit dispatch
+(``"jit"``).  A background compile that fails is surfaced once as a
+``RuntimeWarning`` and in :meth:`Engine.stitch_report` — the engine never
+silently serves the fallback forever.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.exec import stitch
 from repro.models.api import Model
-
-
-def _avals(tree) -> tuple:
-    """(shape, dtype) per leaf — Python scalars get a scalar stand-in."""
-    return tuple(
-        (getattr(x, "shape", ()), str(getattr(x, "dtype", type(x).__name__)))
-        for x in jax.tree_util.tree_leaves(tree))
 
 
 @dataclass
@@ -73,14 +64,10 @@ class Engine:
         self.model = model
         self.params = params
         self.cfg = cfg
-        self._decode = jax.jit(model.decode_step)
         self.stitch_service = stitch_service
-        self.stitch_status: str | None = None   # None|hit|miss|pending|error
-        self._stitch: dict | None = None
         self._scheduler = None
         self.mesh = mesh if (mesh is not None and mesh.size > 1) else None
         self._slot_axes: tuple[str, ...] | None = None
-        self._sharded_decode: dict = {}   # cache avals -> jitted shard_map step
         if self.mesh is not None:
             from repro.models.sharding import batch_shard_axes
             axes = batch_shard_axes(self.mesh, cfg.batch)
@@ -91,10 +78,61 @@ class Engine:
                     f"the slot count to be a multiple of the DP size (or of "
                     f"the whole mesh)")
             self._slot_axes = axes
+        self._exec = self._build_exec()
         self._ragged_prefill = jax.jit(
             lambda p, toks, tl, ml, **kw: model.prefill(
                 p, toks, true_len=tl, max_len=ml, **kw),
             static_argnames=("ml",))
+
+    # -- the one decode dispatch ----------------------------------------------
+    def _build_exec(self):
+        """The stitch()-produced decode step every serving path shares.
+
+        ``extra`` (family-specific decode inputs, e.g. encoder outputs) is a
+        real traced argument, not a closure capture, so later calls' values
+        flow through the stitched graph; a *structure* change is an ordinary
+        signature drift and serves through jit.  Under a mesh the partition
+        specs are derived per signature from the concrete cache pytree
+        (leaf-name based slot specs); signatures with a non-empty ``extra``
+        resolve to ``None`` — their slot layout is family-specific and not
+        worth a wrong guess — which the exec layer serves via plain jit.
+        """
+        model = self.model
+        mode = ("jit" if self.stitch_service is None
+                else "stitch" if self.cfg.stitch_execute else "shadow")
+
+        def decode_step(params, cache, tok, extra):
+            return model.decode_step(params, cache, tok, **extra)
+
+        # eligibility covers only (cache, tok, extra): params are fixed for
+        # an engine's lifetime, so the per-token drift check stays cheap
+        elig = (1, 2, 3)
+        if self.mesh is None:
+            return stitch(decode_step, mode=mode, service=self.stitch_service,
+                          eligibility_argnums=elig, name="decode_step")
+
+        mesh, axes = self.mesh, self._slot_axes
+
+        def in_specs(params, cache, tok, extra):
+            if extra:
+                return None
+            from repro.models.sharding import slot_pspecs
+            return (P(), slot_pspecs(cache, mesh, axes), P(axes, None), P())
+
+        def out_specs(params, cache, tok, extra):
+            from repro.models.sharding import slot_pspecs
+            return (P(axes), slot_pspecs(cache, mesh, axes))
+
+        return stitch(decode_step, mode=mode, service=self.stitch_service,
+                      mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      eligibility_argnums=elig, name="decode_step")
+
+    def _decode_dispatch(self, cache, tok, extra):
+        """One decode step through the shared execution layer — stitched
+        artifact when eligible, jit otherwise, polling the background
+        upgrade each call (so a request stream upgrades mid-stream).  Both
+        routes are DP-replica sharded when the engine has a mesh."""
+        return self._exec(self.params, cache, jnp.asarray(tok), extra)
 
     @property
     def dp_replicas(self) -> int:
@@ -106,184 +144,33 @@ class Engine:
             n *= self.mesh.shape[a]
         return n
 
-    # -- DP-replica jitted decode ---------------------------------------------
-    def _sharded_decode_fn(self, cache):
-        """Jitted ``shard_map`` decode with the slot dim split over the DP
-        replicas; built once per cache structure (the body gathers params,
-        so TP-at-rest storage still works — no in-model collectives)."""
-        from repro.models.sharding import slot_pspecs
-        # keyed on avals, not just treedef: the static path's cache carries a
-        # scalar "length" while the scheduler's is a per-slot vector — same
-        # structure, different slot specs.  A dict (not a single slot) so an
-        # engine alternating generate() and step() keeps both compiles warm.
-        key = (jax.tree_util.tree_structure(cache), _avals(cache))
-        fn = self._sharded_decode.get(key)
-        if fn is None:
-            cspecs = slot_pspecs(cache, self.mesh, self._slot_axes)
-            tspec = P(self._slot_axes, None)
-            fn = jax.jit(shard_map(
-                lambda p, c, t: self.model.decode_step(p, c, t),
-                mesh=self.mesh, in_specs=(P(), cspecs, tspec),
-                out_specs=(P(self._slot_axes), cspecs), check_rep=False))
-            self._sharded_decode[key] = fn
-        return fn
+    # -- observability ---------------------------------------------------------
+    @property
+    def stitch_status(self) -> str | None:
+        """None before the first decode (or without a service), else the
+        exec layer's status: hit | miss | pending | failed | error."""
+        if self.stitch_service is None:
+            return None
+        return self._exec.status
 
-    def _jit_decode(self, cache, tok, extra):
-        """One jitted decode step — DP-replica sharded when a mesh is set
-        (extra inputs force the unsharded path: their slot layout is
-        family-specific and not worth a wrong guess)."""
-        if self.mesh is not None and not extra:
-            return self._sharded_decode_fn(cache)(self.params, cache, tok)
-        return self._decode(self.params, cache, tok, **extra)
-
-    # -- fusion-stitching plumbing -------------------------------------------
-    def _prepare_stitch(self, cache, tok, extra) -> None:
-        from repro.cache.signature import compute_signature, placement_key
-        from repro.core.trace import trace_to_graph
-
-        # extra is traced as a real input (not baked into the closure) so
-        # later calls' values — e.g. per-request encoder outputs — flow
-        # through the stitched graph; only a *structure* change forces the
-        # jitted fallback (checked per call in generate()).
-        def step(params, cache, tok, extra):
-            return self.model.decode_step(params, cache, tok, **extra)
-
-        # under a mesh the decode graph is traced at SHARD-LOCAL shapes: the
-        # executable runs inside shard_map with the slot dim split over the
-        # DP replicas, and its cache key carries the mesh+spec placement
-        sharded = self.mesh is not None and not extra
-        placement, cspecs, tspec = "", None, None
-        trace_cache, trace_tok = cache, tok
-        if sharded:
-            from repro.models.sharding import local_avals, slot_pspecs
-            cspecs = slot_pspecs(cache, self.mesh, self._slot_axes)
-            tspec = P(self._slot_axes, None)
-            trace_cache = local_avals(cache, cspecs, self.mesh)
-            trace_tok = local_avals(jnp.asarray(tok), tspec, self.mesh)
-            placement = placement_key(self.mesh, (P(), cspecs, tspec))
-        try:
-            g, names = trace_to_graph(step, self.params, trace_cache,
-                                      trace_tok, extra, name="decode_step")
-            compiled, status = self.stitch_service.compile_or_fallback(
-                g, placement=placement)
-            out_tree = jax.tree_util.tree_structure(
-                jax.eval_shape(step, self.params, trace_cache, trace_tok,
-                               extra))
-        except Exception:
-            self.stitch_status = "error"
-            self._stitch = {}
-            return
-        executable = out_tree.num_leaves == len(g.outputs)
-        # eligibility keys cover only (cache, tok, extra): params are fixed
-        # for an engine's lifetime, so the per-step check stays cheap.
-        # in_avals stay GLOBAL — the shard_map boundary does the slicing.
-        self._stitch = {"graph": g, "names": names, "out_tree": out_tree,
-                        "compiled": compiled, "executable": executable,
-                        "in_tree": jax.tree_util.tree_structure(
-                            (cache, tok, extra)),
-                        "in_avals": _avals((cache, tok, extra)),
-                        "sig": compute_signature(g),
-                        "sharded": sharded, "cspecs": cspecs, "tspec": tspec,
-                        "placement": placement,
-                        "compiler": self.stitch_service.compiler(
-                            "stitch", placement)}
-        self.stitch_status = status
-
-    def _refresh_stitch(self) -> None:
-        """Upgrade the fallback executable once the background compile of the
-        stitched plan has landed in the cache.  The signature and compiler
-        are memoized from trace time, so a still-pending poll costs a dict
-        probe, not a graph hash."""
-        if not self._stitch:
-            return
-        svc = self.stitch_service
-        hit = svc.cache.lookup(self._stitch["graph"], self._stitch["compiler"],
-                               sig=self._stitch["sig"], count=False)
-        if hit is not None:
-            self._stitch["compiled"] = hit
-            self.stitch_status = "hit"
-        else:
-            # re-kick if our background compile was deferred (worker cap) or
-            # died — otherwise this engine would serve the fallback forever
-            svc.ensure_compiling(self._stitch["graph"], sig=self._stitch["sig"],
-                                 placement=self._stitch.get("placement", ""))
-
-    def _stitch_exec(self, params, cache, tok, extra):
-        st = self._stitch
-        leaves = jax.tree_util.tree_leaves((params, cache, tok, extra))
-        env = dict(zip(st["names"], leaves))
-        outs = st["compiled"](env)
-        flat = [outs[o] for o in st["graph"].outputs]
-        return jax.tree_util.tree_unflatten(st["out_tree"], flat)
-
-    def _stitch_decode(self, cache, tok, extra):
-        st = self._stitch
-        if st.get("sharded"):
-            # per-shard stitched execution: the executable was compiled at
-            # shard-local shapes; the shard_map boundary slices the slots.
-            # The jitted wrapper is memoized per executable — rebuilt only
-            # when an upgrade swaps st["compiled"] — so steady-state decode
-            # is a jit-cache hit per token, not a retrace.
-            if st.get("_sm_for") is not st["compiled"]:
-                st["_sm_fn"] = jax.jit(shard_map(
-                    lambda p, c, t: self._stitch_exec(p, c, t, {}),
-                    mesh=self.mesh, in_specs=(P(), st["cspecs"], st["tspec"]),
-                    out_specs=(P(self._slot_axes), st["cspecs"]),
-                    check_rep=False))
-                st["_sm_for"] = st["compiled"]
-            return st["_sm_fn"](self.params, cache, jnp.asarray(tok))
-        return self._stitch_exec(self.params, cache, tok, extra)
+    @property
+    def _stitch(self) -> dict | None:
+        """Test/debug view of the active stitched specialization."""
+        sp = self._exec._active
+        if sp is None:
+            return None
+        if sp.graph is None:
+            return {}
+        return {"graph": sp.graph, "compiled": sp.compiled,
+                "placement": sp.placement, "sharded": sp.sharded,
+                "executable": sp.executable}
 
     def stitch_report(self) -> dict:
-        """Observability: upgrade status, plan stats, cache hit rates."""
-        out: dict[str, Any] = {"status": self.stitch_status}
-        if self._stitch and self._stitch.get("compiled") is not None:
-            s = self._stitch["compiled"].stats
-            out["plan"] = {
-                "mode": s.mode, "n_kernels": s.n_kernels, "n_ops": s.n_ops,
-                "pallas_groups": s.pallas_groups,
-                "modeled_time": s.modeled_time,
-                "cache_status": s.cache_status,
-            }
-        if self.stitch_service is not None:
-            out["cache"] = self.stitch_service.cache.report()
-            out["service_error"] = self.stitch_service.last_error
-        return out
-
-    def _poll_stitch(self, cache, tok, extra) -> None:
-        """Trace-on-first-use, then poll the background upgrade while the
-        fallback is still serving."""
+        """Upgrade status, plan stats, call counts, cache hit rates, and
+        any background-compile failure (see ``"error"``)."""
         if self.stitch_service is None:
-            return
-        if self._stitch is None:
-            self._prepare_stitch(cache, tok, extra)
-        elif self.stitch_status in ("miss", "pending"):
-            self._refresh_stitch()
-
-    def _use_stitched(self, cache, tok, extra) -> bool:
-        # the stitched executable is shape-specialized at trace time; any
-        # structure OR leaf-shape drift (e.g. per-request encoder outputs of
-        # a new length) falls back to the jitted step for this call
-        if not (self.cfg.stitch_execute
-                and self._stitch
-                and self._stitch.get("executable")
-                and self._stitch.get("compiled") is not None):
-            return False
-        inputs = (cache, tok, extra)
-        return (jax.tree_util.tree_structure(inputs) == self._stitch["in_tree"]
-                and _avals(inputs) == self._stitch["in_avals"])
-
-    def _decode_dispatch(self, cache, tok, extra):
-        """One decode step through the stitched artifact when eligible,
-        else the jitted step — polling the upgrade each call (the scheduler
-        path, so a request stream upgrades mid-stream).  Both routes are
-        DP-replica sharded when the engine has a mesh."""
-        if self.stitch_service is None:
-            return self._jit_decode(cache, tok, extra)
-        self._poll_stitch(cache, tok, extra)
-        if self._use_stitched(cache, tok, extra):
-            return self._stitch_decode(cache, tok, extra)
-        return self._jit_decode(cache, tok, extra)
+            return {"status": None}
+        return self._exec.report()
 
     # -- continuous batching ---------------------------------------------------
     @property
@@ -346,18 +233,14 @@ class Engine:
         return self._decode_loop(cache, tok, extra)
 
     def _decode_loop(self, cache, tok, extra) -> np.ndarray:
-        """Lock-step greedy decode for ``max_new_tokens`` steps; the stitch
-        eligibility decision is made once per call (shapes are loop-
-        invariant)."""
-        self._poll_stitch(cache, tok, extra)
-        use_stitched = self._use_stitched(cache, tok, extra)
+        """Lock-step greedy decode for ``max_new_tokens`` steps through the
+        shared dispatch (the exec layer re-checks eligibility and polls the
+        upgrade per step — numerics are identical across an upgrade, so a
+        mid-loop artifact swap is invisible in the tokens)."""
         out = []
         for _ in range(self.cfg.max_new_tokens):
             out.append(np.asarray(tok))
-            if use_stitched:
-                logits, cache = self._stitch_decode(cache, tok, extra)
-            else:
-                logits, cache = self._jit_decode(cache, tok, extra)
+            logits, cache = self._decode_dispatch(cache, tok, extra)
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         return np.concatenate(out, axis=1)
 

@@ -1,52 +1,31 @@
-"""Stitched training step — the fusion pipeline applied to the backward pass
-and the optimizer phase, on one device or over a whole mesh.
+"""Stitched training step — two :func:`repro.exec.stitch` callables plus
+training-specific glue.
 
 Training is the paper's canonical memory-intensive workload: the backward
 pass of norms/softmax/cross-entropy and the AdamW+clip update are pure
-elementwise+reduction traffic over every parameter.  This module routes both
-phases of :func:`repro.train.step.make_train_step` through the stitch
-compiler:
+elementwise+reduction traffic over every parameter.  Since the
+``repro.exec`` refactor this module owns only the *training* decisions —
+everything about tracing, compile-or-fallback, miss-then-upgrade polling,
+shard_map construction, and placement-keyed caching lives in the shared
+execution layer:
 
 * **Backward phase** — the ``jax.value_and_grad``-built loss+grad function
   (:func:`~repro.train.step.make_loss_and_grad`, including microbatch
-  accumulation) is traced to StitchIR with
-  :func:`~repro.core.trace.trace_to_graph`.  Backward-only primitives are
-  covered first-class where the IR has a kind (scatter-add from embedding
-  gradients, ``add_any`` grad accumulation, trig from RoPE) and fall back to
-  executable CUSTOM nodes otherwise (``scan`` bodies, iota) — those
-  partition fusion exactly like the paper's opaque ops but keep the graph
-  runnable end-to-end.
-* **Optimizer phase** — the params pytree is flattened into shared-row
-  panels and the whole AdamW+global-norm-clip update becomes ONE packed
-  kernel (:class:`repro.optim.packed.PackedAdamW`): independent per-tensor
-  update chains sharing a single kernel's grid, the paper's "fusion without
-  data dependences".
-
-Both graphs compile through :class:`repro.cache.CompilationService`
-miss-then-upgrade: step 0 executes the instantly-available XLA-mode
-fallback artifact (identical numerics), the full stitch pipeline runs on a
-background thread, and every later step polls the cache so the run upgrades
-to stitched plans mid-flight — mirroring the serving engine's behavior.
-
-Mesh-aware execution (``mesh=`` + forced host devices, or a real slice):
-both stitched phases dispatch through :func:`jax.experimental.shard_map`
-with *per-shard* graphs traced and solved at shard-local shapes, and their
-cache keys carry a mesh+PartitionSpec placement component so a plan solved
-at one mesh never replays at another:
-
-* the **backward** body sees the params gathered (``in_specs=P()``; params
-  may live TP-sharded at rest) and the batch rows split over every mesh
-  axis that divides them — the model axis moonlights as extra data
-  parallelism, since the shard-local body contains no TP collectives.  The
-  DP gradient/loss ``psum``-mean runs *outside* the stitched region, at the
-  tail of the shard_map body.
-* the **optimizer** body updates TP-shard-local parameter panels: the
-  packed kernel's operands are each shard's slice of the param/grad/moment
-  trees (the shard_map boundary does the slicing), with the global-norm
-  clip scale fed in as a scalar computed from the reduced full gradients
-  (``PackedAdamW(external_ssq=True)``).  New params come back TP-sharded;
-  opt moments stay co-located with their params (no ZeRO offset — the
-  panels must be shard-local slices of both).
+  accumulation) becomes one ``stitch()``-produced callable.  Under a mesh
+  the stitched function is the *shard-local* body with the DP ``pmean`` of
+  loss/aux/grads written at its tail (the psum-mean placement is glue; the
+  collectives trace via ``axis_env`` into executable CUSTOM fusion
+  partitions), ``in_specs=(P(), batch_specs)`` so params arrive gathered
+  (TP-at-rest storage fine) and batch rows split over every dividing mesh
+  axis.
+* **Optimizer phase** — :class:`repro.optim.packed.PackedAdamW` (itself
+  built on ``stitch()``): the whole AdamW+global-norm-clip update is ONE
+  packed kernel over shared-row panels.  Under a mesh the packed kernel
+  updates TP-shard-local param panels inside a
+  :func:`repro.exec.shard_wrap` dispatch (rebuilt when an upgrade swaps
+  the artifact), with the clip scale fed as a scalar from the reduced full
+  gradients (``external_ssq=True``); m/v stay co-located with params via
+  :meth:`state_shardings` — no ZeRO on this path.
 
 The consumed ``TrainState`` is donated by default (``donate=False`` opts
 out): the jit fallback uses ``donate_argnums`` and the stitched dispatch
@@ -54,8 +33,9 @@ deletes the old params/moments once the update has been dispatched, so peak
 memory holds one copy of params+opt, not two.
 
 If tracing or compilation fails outright the step degrades to the plain
-jitted reference (status ``"error"``); a per-call shape drift (e.g. a
-last-partial batch) falls back to the jitted step for that call only.
+jitted reference; a per-call shape drift (e.g. a last-partial batch) falls
+back to the jitted step for that call only (``fallback_steps`` counts
+both).
 """
 
 from __future__ import annotations
@@ -65,84 +45,14 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.exec import shard_wrap, stitch, tree_avals as _avals
 from repro.models.api import Model
 from repro.optim import adamw
 from repro.optim.packed import PackedAdamW
 
 from .step import TrainState, make_loss_and_grad, make_train_step
-
-
-def _avals(tree) -> tuple:
-    return tuple(
-        (getattr(x, "shape", ()), str(getattr(x, "dtype", type(x).__name__)))
-        for x in jax.tree_util.tree_leaves(tree))
-
-
-class _TracedPhase:
-    """One traced-and-compiled function with miss-then-upgrade polling."""
-
-    def __init__(self, fn, example_args, service, name: str,
-                 placement: str = ""):
-        from repro.cache.signature import compute_signature
-        from repro.core.trace import trace_to_graph
-
-        self.status = "error"
-        self.graph = None
-        self.compiled = None
-        self.placement = placement
-        try:
-            self.graph, self.names = trace_to_graph(fn, *example_args, name=name)
-            self.out_tree = jax.tree_util.tree_structure(
-                jax.eval_shape(fn, *example_args))
-            if self.out_tree.num_leaves != len(self.graph.outputs):
-                return                       # duplicated outputs: not executable
-            self.compiled, self.status = service.compile_or_fallback(
-                self.graph, placement=placement)
-            self.sig = compute_signature(self.graph)
-            self.compiler = service.compiler("stitch", placement)
-            self.service = service
-            self.in_avals = _avals(example_args)
-        except Exception:
-            self.graph = None
-            self.compiled = None
-
-    @property
-    def ok(self) -> bool:
-        return self.compiled is not None
-
-    def eligible(self, args) -> bool:
-        return self.ok and _avals(args) == self.in_avals
-
-    def poll_upgrade(self) -> None:
-        if not self.ok or self.status not in ("miss", "pending"):
-            return
-        hit = self.service.cache.lookup(self.graph, self.compiler,
-                                        sig=self.sig, count=False)
-        if hit is not None:
-            self.compiled = hit
-            self.status = "hit"
-        else:
-            # re-kick if the background compile was deferred (worker cap) or
-            # died — a training run must not serve the fallback forever
-            self.service.ensure_compiling(self.graph, sig=self.sig,
-                                          placement=self.placement)
-
-    def run(self, *args):
-        env = dict(zip(self.names, jax.tree_util.tree_leaves(args)))
-        outs = self.compiled(env)
-        flat = [outs[o] for o in self.graph.outputs]
-        return jax.tree_util.tree_unflatten(self.out_tree, flat)
-
-    def plan_stats(self) -> dict | None:
-        if self.compiled is None:
-            return None
-        s = self.compiled.stats
-        return {"mode": s.mode, "n_kernels": s.n_kernels, "n_ops": s.n_ops,
-                "pallas_groups": s.pallas_groups, "modeled_time": s.modeled_time,
-                "cache_status": s.cache_status}
 
 
 class StitchedTrainStep:
@@ -183,10 +93,10 @@ class StitchedTrainStep:
         self._jit_step = jax.jit(make_train_step(model, opt_cfg, microbatches),
                                  donate_argnums=(0,) if donate else ())
         self._prepared = False
-        self._grad: _TracedPhase | None = None
+        self._grad = None                    # stitch()-produced backward phase
         self._packed: PackedAdamW | None = None
-        self._grad_sm = None                 # shard_map'd backward dispatch
-        self._upd_sm = None                  # shard_map'd optimizer dispatch
+        self._upd_dispatch = None            # shard_wrap'd optimizer dispatch
+        self._sharded_ok = False
         self._global_avals = None            # sharded-path eligibility key
         self.fallback_steps = 0              # calls served by the jitted step
 
@@ -196,8 +106,9 @@ class StitchedTrainStep:
         if self.mesh is not None:
             self._prepare_sharded(state, batch)
             return
-        self._grad = _TracedPhase(self._grad_fn, (state.params, batch),
-                                  self.service, name="train_grad")
+        self._grad = stitch(self._grad_fn, service=self.service,
+                            name="train_grad")
+        self._grad.warmup(state.params, batch)
         try:
             self._packed = PackedAdamW(self.opt_cfg, state.params,
                                        rows=self.rows, service=self.service)
@@ -206,7 +117,7 @@ class StitchedTrainStep:
 
     def _prepare_sharded(self, state: TrainState, batch) -> None:
         from repro.cache.signature import placement_key
-        from repro.models.sharding import (batch_shard_axes, local_avals)
+        from repro.models.sharding import batch_shard_axes, local_avals
 
         mesh = self.mesh
         self._global_avals = _avals((state.params, batch))
@@ -224,14 +135,27 @@ class StitchedTrainStep:
         if self.microbatches > 1 and B_local % self.microbatches:
             # shard-local rows don't split into microbatches: serve the
             # sharded jit fallback rather than change the accumulation math
-            self._grad = None
-            self._packed = None
             return
-        # backward: per-shard graph at (full params, shard-local batch)
-        grad_pl = placement_key(mesh, (P(), bspecs))
-        self._grad = _TracedPhase(self._grad_fn, (aparams, local_batch),
-                                  self.service, name="train_grad",
-                                  placement=grad_pl)
+
+        # backward: the shard-local body ends with the DP psum-mean — the
+        # training-specific placement decision — and stitch() traces the
+        # collectives via axis_env into executable CUSTOM fusion partitions
+        allax = tuple(mesh.axis_names)
+        grad_fn = self._grad_fn
+
+        def local_grad(params, b):
+            loss, aux, grads = grad_fn(params, b)
+            loss = jax.lax.pmean(loss, allax)
+            aux = jax.tree.map(lambda a: jax.lax.pmean(a, allax), aux)
+            grads = jax.tree.map(
+                lambda g: jax.lax.pmean(g.astype(jnp.float32), allax), grads)
+            return loss, aux, grads
+
+        self._grad = stitch(local_grad, service=self.service, mesh=mesh,
+                            in_specs=(P(), bspecs),
+                            out_specs=(P(), P(), P()), name="train_grad")
+        self._grad.warmup(state.params, batch)
+
         # optimizer: per-shard packed panels over TP-local param slices
         try:
             local_params = local_avals(aparams, pspecs, mesh)
@@ -241,34 +165,22 @@ class StitchedTrainStep:
                 placement=placement_key(mesh, pspecs))
         except Exception:
             self._packed = None
-        if self._grad is None or not self._grad.ok or self._packed is None:
+        if not self._grad.ok or self._packed is None:
             return
 
-        allax = tuple(mesh.axis_names)
-
-        def local_grad(params, b):
-            loss, aux, grads = self._grad.run(params, b)
-            # DP psum-mean OUTSIDE the stitched region: the executable above
-            # computed this shard's rows only
-            loss = jax.lax.pmean(loss, allax)
-            aux = jax.tree.map(lambda a: jax.lax.pmean(a, allax), aux)
-            grads = jax.tree.map(
-                lambda g: jax.lax.pmean(g.astype(jnp.float32), allax), grads)
-            return loss, aux, grads
-
-        self._grad_sm = shard_map(
-            local_grad, mesh=mesh, in_specs=(P(), bspecs),
-            out_specs=(P(), P(), P()), check_rep=False)
+        packed = self._packed
 
         def local_update(params, grads, m, v, lr, b1c, b2c, gss):
-            return self._packed.update_local(params, grads, m, v,
-                                             lr, b1c, b2c, gss=gss)
+            return packed.update_local(params, grads, m, v,
+                                       lr, b1c, b2c, gss=gss)
 
         sc = P()
-        self._upd_sm = shard_map(
-            local_update, mesh=mesh,
+        self._upd_dispatch = shard_wrap(
+            local_update, mesh,
             in_specs=(pspecs, pspecs, pspecs, pspecs, sc, sc, sc, sc),
-            out_specs=(pspecs, pspecs, pspecs, sc), check_rep=False)
+            out_specs=(pspecs, pspecs, pspecs, sc),
+            refresh_key=lambda: packed._compiled)
+        self._sharded_ok = True
 
     # -- mesh placement for the launcher --------------------------------------
     def state_shardings(self) -> TrainState:
@@ -310,6 +222,10 @@ class StitchedTrainStep:
         if self.service is not None:
             out["cache"] = self.service.cache.report()
             out["service_error"] = self.service.last_error
+        if self._grad is not None:
+            rep = self._grad.report()
+            if "error" in rep:
+                out["grad"]["error"] = rep["error"]
         return out
 
     # -- the step --------------------------------------------------------------
@@ -318,12 +234,11 @@ class StitchedTrainStep:
             self._prepare(state, batch)
         if self.mesh is not None:
             return self._call_sharded(state, batch)
-        grad_ok = self._grad.eligible((state.params, batch))
-        if not grad_ok or self._packed is None:
+        if (self._grad is None or self._packed is None
+                or not self._grad.eligible(state.params, batch)):
             self.fallback_steps += 1
             return self._jit_step(state, batch)
-        self._grad.poll_upgrade()
-        loss, aux, grads = self._grad.run(state.params, batch)
+        loss, aux, grads = self._grad(state.params, batch)
         new_params, new_opt, opt_metrics = self._packed.update(
             grads, state.opt, state.params)
         metrics = {"loss": loss, "step": state.step + 1, **opt_metrics, **aux}
@@ -333,15 +248,13 @@ class StitchedTrainStep:
         return out
 
     def _call_sharded(self, state: TrainState, batch) -> tuple[TrainState, dict]:
-        ok = (self._grad is not None and self._grad.ok
-              and self._packed is not None and self._upd_sm is not None
+        ok = (self._sharded_ok and self._grad is not None and self._grad.ok
               and _avals((state.params, batch)) == self._global_avals)
         if not ok:
             self.fallback_steps += 1
             return self._jit_step(state, batch)
-        self._grad.poll_upgrade()
         self._packed.poll_upgrade()
-        loss, aux, grads = self._grad_sm(state.params, batch)
+        loss, aux, grads = self._grad(state.params, batch)
         cfg = self.opt_cfg
         count = state.opt.count + 1
         lr = adamw.schedule(cfg, count)
@@ -353,7 +266,7 @@ class StitchedTrainStep:
         gss = functools.reduce(
             jnp.add, [jnp.sum(jnp.square(g))
                       for g in jax.tree_util.tree_leaves(grads)])
-        new_p, new_m, new_v, gnorm = self._upd_sm(
+        new_p, new_m, new_v, gnorm = self._upd_dispatch(
             state.params, grads, state.opt.m, state.opt.v,
             jnp.asarray(lr, jnp.float32), jnp.asarray(b1c, jnp.float32),
             jnp.asarray(b2c, jnp.float32), gss)

@@ -317,8 +317,11 @@ def test_engine_miss_then_upgrade_identical_tokens():
                              stitch_execute=True),
                  stitch_service=svc)
     first = eng.generate(prompts.copy())
-    assert eng.stitch_status in ("miss", "pending")
-    np.testing.assert_array_equal(first, ref)     # fallback path serves now
+    # the shared exec layer polls per decode step (the scheduler-path
+    # behavior, now unified), so the background compile may land and
+    # upgrade mid-generate; anything but a failure is healthy here
+    assert eng.stitch_status in ("miss", "pending", "hit")
+    np.testing.assert_array_equal(first, ref)     # fallback/upgraded serve
     svc.wait(timeout=300)
     second = eng.generate(prompts.copy())
     assert eng.stitch_status == "hit"             # upgraded to stitched plan

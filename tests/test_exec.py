@@ -1,0 +1,313 @@
+"""The public execution layer: ``repro.exec.stitch()``.
+
+Contract under test — the jit-like transform every subsystem now dispatches
+through: pytree-aware tracing (nested containers, kwargs), static-argnum
+specialization, shape-drift fallback, miss-then-upgrade, donation, sharded
+dispatch equality, background-failure surfacing, and the anytime ILP budget
+feeding the same pipeline.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.cache import CompilationService
+from repro.exec import StitchedFunction, stitch
+from repro.launch.mesh import make_host_mesh
+
+
+def ck(a, b, rtol=1e-6, atol=1e-6):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   rtol=rtol, atol=atol)
+
+
+@pytest.fixture
+def svc():
+    # max_background=0: upgrades land only when the test compiles them —
+    # deterministic miss-then-upgrade points
+    return CompilationService(max_background=0)
+
+
+# ---------------------------------------------------------------------------
+# the tracing boundary: pytrees, kwargs, statics, drift
+# ---------------------------------------------------------------------------
+
+def test_stitch_pytree_and_kwargs_roundtrip(svc):
+    """Nested dict/tuple inputs AND outputs round-trip through stitch()
+    matching the jit reference, with kwargs flowing as traced inputs."""
+    def fn(tree, pair, bias=None):
+        x, y = pair
+        h = tree["a"]["w"] * jnp.tanh(x) + y
+        if bias is not None:
+            h = h + bias["b"]
+        return {"out": (h, h * 2.0), "norm": jnp.sqrt(jnp.sum(h * h, -1))}
+
+    rng = np.random.default_rng(0)
+    tree = {"a": {"w": jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)}}
+    pair = (jnp.asarray(rng.standard_normal((8, 16)), jnp.float32),
+            jnp.asarray(rng.standard_normal((16,)), jnp.float32))
+    bias = {"b": jnp.asarray(rng.standard_normal((16,)), jnp.float32)}
+
+    sf = stitch(fn, service=svc)
+    out = sf(tree, pair, bias=bias)
+    ref = jax.jit(fn)(tree, pair, bias=bias)
+    assert (jax.tree_util.tree_structure(out)
+            == jax.tree_util.tree_structure(ref))
+    ck(out, ref)
+    assert sf.stitched_calls == 1 and sf.fallback_calls == 0
+    assert sf.status in ("miss", "pending")
+
+    # a kwargs *structure* change is signature drift: jit serves that call
+    out2 = sf(tree, pair)
+    ck(out2, jax.jit(fn)(tree, pair))
+    assert sf.fallback_calls == 1
+
+
+def test_stitch_static_argnums_retrace_on_change(svc):
+    def fn(x, n):
+        return {"p": x ** n, "s": jnp.sum(x) * n}
+
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((4, 8)),
+                    jnp.float32)
+    sf = stitch(fn, service=svc, static_argnums=(1,))
+    ck(sf(x, 2), jax.jit(fn, static_argnums=(1,))(x, 2))
+    ck(sf(x, 3), jax.jit(fn, static_argnums=(1,))(x, 3))
+    ck(sf(x, 2), jax.jit(fn, static_argnums=(1,))(x, 2))   # cached retrace
+    assert sf.report()["specializations"] == 2
+    assert sf.stitched_calls == 3 and sf.fallback_calls == 0
+
+
+def test_stitch_shape_drift_falls_back(svc):
+    def fn(d):
+        return {"y": jnp.tanh(d["x"]) * d["g"]}
+
+    rng = np.random.default_rng(2)
+    d = {"x": jnp.asarray(rng.standard_normal((8, 16)), jnp.float32),
+         "g": jnp.asarray(rng.standard_normal((16,)), jnp.float32)}
+    sf = stitch(fn, service=svc)
+    sf(d)
+    assert sf.fallback_calls == 0
+    drifted = {"x": d["x"][:, :8], "g": d["g"][:8]}
+    ck(sf(drifted), jax.jit(fn)(drifted))          # served by jit, this call
+    assert sf.fallback_calls == 1
+    sf(d)                                          # original shape: stitched
+    assert sf.fallback_calls == 1 and sf.stitched_calls == 2
+
+
+def test_stitch_upgrade_hits_and_matches(svc):
+    def fn(d):
+        h = jnp.exp(d["x"] - jnp.max(d["x"], -1, keepdims=True))
+        return h / jnp.sum(h, -1, keepdims=True)
+
+    d = {"x": jnp.asarray(np.random.default_rng(3).standard_normal((16, 64)),
+                          jnp.float32)}
+    sf = stitch(fn, service=svc)
+    first = sf(d)
+    assert sf.status in ("miss", "pending")
+    assert sf.compiled.stats.mode == "xla"         # fallback artifact
+    svc.compiler("stitch").compile(sf.graph, bypass_cache_lookup=True)
+    second = sf(d)
+    assert sf.status == "hit"
+    assert sf.compiled.stats.mode == "stitch"
+    ck(first, jax.jit(fn)(d))
+    ck(second, jax.jit(fn)(d))
+    assert sf.plan_stats()["n_kernels"] < sf.plan_stats()["n_ops"]
+
+
+def test_stitch_donate_argnums_deletes_consumed(svc):
+    def fn(state, g):
+        return {"w": state["w"] - 0.1 * g}
+
+    state = {"w": jnp.ones((8, 8), jnp.float32)}
+    g = jnp.ones((8, 8), jnp.float32)
+    sf = stitch(fn, service=svc, donate_argnums=(0,))
+    out = sf(state, g)
+    assert state["w"].is_deleted()
+    assert not out["w"].is_deleted()
+
+
+def test_stitch_donation_keeps_passthrough_outputs(svc):
+    """A donated input leaf that the function returns unchanged is aliased
+    by the output — it must survive the donation (jit aliases it safely;
+    the stitched delete must not corrupt the result)."""
+    def fn(state, g):
+        return {"w": state["w"] - 0.1 * g, "frozen": state["frozen"]}
+
+    state = {"w": jnp.ones((8, 8), jnp.float32),
+             "frozen": jnp.full((4,), 7.0, jnp.float32)}
+    g = jnp.ones((8, 8), jnp.float32)
+    sf = stitch(fn, service=svc, donate_argnums=(0,))
+    out = sf(state, g)
+    assert sf.stitched_calls == 1
+    assert state["w"].is_deleted()               # genuinely consumed
+    assert not out["frozen"].is_deleted()        # passthrough survives
+    np.testing.assert_array_equal(np.asarray(out["frozen"]), np.full(4, 7.0))
+
+
+def test_stitch_shadow_mode_serves_jit_but_reports(svc):
+    def fn(x):
+        return jnp.tanh(x) * 2.0
+
+    x = jnp.ones((4, 4), jnp.float32)
+    sf = stitch(fn, mode="shadow", service=svc)
+    ck(sf(x), jax.jit(fn)(x))
+    assert sf.jit_calls == 1 and sf.stitched_calls == 0
+    assert sf.report()["plan"]["mode"] == "xla"    # compiled for reporting
+
+
+# ---------------------------------------------------------------------------
+# sharded dispatch (the --model-parallel 2 acceptance shape)
+# ---------------------------------------------------------------------------
+
+def test_stitch_sharded_matches_jit_reference():
+    """An arbitrary pytree function with an in-body collective, stitched
+    over the (4, 2) host mesh, matches its (single-device) jit reference
+    across the miss-then-upgrade transition, under a mesh-keyed placement."""
+    mesh = make_host_mesh(2)
+    allax = tuple(mesh.axis_names)
+
+    def fn(params, b):
+        h = jnp.tanh(b["x"] @ params["w"]) + params["c"]
+        loss = jax.lax.pmean(jnp.mean(h), allax)
+        return {"loss": loss, "h": h * 2.0}
+
+    def ref_fn(params, b):
+        h = jnp.tanh(b["x"] @ params["w"]) + params["c"]
+        return {"loss": jnp.mean(h), "h": h * 2.0}
+
+    rng = np.random.default_rng(4)
+    params = {"w": jnp.asarray(rng.standard_normal((16, 16)), jnp.float32),
+              "c": jnp.asarray(rng.standard_normal((16,)), jnp.float32)}
+    b = {"x": jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)}
+
+    svc = CompilationService(max_background=0)
+    sf = stitch(fn, service=svc, mesh=mesh,
+                in_specs=(P(), P(allax)),
+                out_specs={"loss": P(), "h": P(allax)})
+    ref = jax.jit(ref_fn)(params, b)
+    ck(sf(params, b), ref)
+    assert sf.placement.startswith("mesh[data=4,model=2]")
+    assert sf._active.sharded
+    svc.compiler("stitch", sf.placement).compile(sf.graph,
+                                                 bypass_cache_lookup=True)
+    ck(sf(params, b), ref)
+    assert sf.status == "hit" and sf.compiled.stats.mode == "stitch"
+    # mesh-keyed: the plan does not exist at the single-device placement
+    assert svc.cache.lookup(sf.graph, svc.compiler("stitch")) is None
+
+
+def test_stitch_mesh_requires_specs():
+    mesh = make_host_mesh(1)
+    if mesh.size == 1:
+        pytest.skip("needs a multi-device host")
+    with pytest.raises(ValueError, match="in_specs"):
+        stitch(lambda x: x, mode="jit", mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# background-compile failure: surfaced once, never silently swallowed
+# ---------------------------------------------------------------------------
+
+def test_background_failure_warns_once_and_reports(monkeypatch):
+    def fn(x):
+        return jnp.tanh(x) * jnp.exp(x)
+
+    x = jnp.ones((8, 32), jnp.float32)
+    svc = CompilationService(max_background=0)   # no thread yet
+    sf = stitch(fn, service=svc)
+    sf(x)                                        # trace + fallback artifact
+    assert sf.status in ("miss", "pending")
+
+    def boom(*a, **k):
+        raise RuntimeError("ILP exploded")
+
+    # only stitch-mode compiles solve the ILP; the xla fallback is unaffected
+    monkeypatch.setattr("repro.core.compiler.solve_fusion_plan", boom)
+    svc.max_background = 2
+    sf(x)                                        # poll re-kicks the compile
+    svc.wait(60.0)
+    with pytest.warns(RuntimeWarning, match="ILP exploded"):
+        sf(x)                                    # failure surfaced, once
+    assert sf.status == "failed"
+    rep = sf.report()
+    assert "ILP exploded" in rep["error"]
+    assert "ILP exploded" in rep["service_error"]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        out = sf(x)                              # no second warning; and the
+    ck(out, jax.jit(fn)(x))                      # fallback still serves
+    # the doomed compile is not re-kicked
+    assert not svc.ensure_compiling(sf.graph)
+
+
+# ---------------------------------------------------------------------------
+# anytime ILP: wall-clock budget -> greedy fallback plan
+# ---------------------------------------------------------------------------
+
+def _mlp_graph(rows=64, d=128):
+    from repro.core import GraphBuilder
+
+    b = GraphBuilder("mlp_norm")
+    x = b.param("x", (rows, d))
+    w = b.param("w", (d, d))
+    gm = b.param("gamma", (d,))
+    h = b.dot(x, w, name="dot_0")
+    mu = b.reduce("mean", h, axes=(1,), keepdims=True)
+    dlt = b.ew("sub", h, b.bcast(mu, (rows, d), (0, 1)))
+    v = b.reduce("mean", b.ew("square", dlt), axes=(1,), keepdims=True)
+    eps = b.const("eps", ())
+    b.graph[eps].attrs["value"] = np.float32(1e-6)
+    r = b.ew("rsqrt", b.ew("add", v, eps))
+    y = b.ew("mul", b.ew("mul", dlt, b.bcast(r, (rows, d), (0, 1))),
+             b.ew("relu", b.bcast(gm, (rows, d), (1,))))
+    return b.build(outputs=[y])
+
+
+def test_anytime_ilp_greedy_fallback_is_valid():
+    from repro.core import CostModel, GenConfig, generate_patterns
+    from repro.core.ilp import solve_fusion_plan
+
+    g = _mlp_graph()
+    patterns = generate_patterns(g, GenConfig())
+    scores = [CostModel().score(p).score for p in patterns]
+
+    exact = solve_fusion_plan(g, patterns, scores)
+    assert exact.method == "ilp" and not exact.budget_expired
+
+    budgeted = solve_fusion_plan(g, patterns, scores, budget_seconds=0.0)
+    assert budgeted.method == "greedy" and budgeted.budget_expired
+    # valid plan: pairwise disjoint members, every member a graph node
+    seen = set()
+    for p in budgeted.chosen:
+        assert not (p.members & seen)
+        seen |= p.members
+    assert budgeted.objective > 0
+
+
+def test_plan_budget_compiles_correct_executable(rng):
+    from repro.core import StitchCompiler, build_reference_fn
+
+    g = _mlp_graph()
+    inputs = {"x": rng.standard_normal((64, 128)).astype(np.float32),
+              "w": (rng.standard_normal((128, 128)) * 0.05).astype(np.float32),
+              "gamma": rng.standard_normal(128).astype(np.float32)}
+    compiled = StitchCompiler(mode="stitch", plan_budget=0.0).compile(g)
+    assert compiled.stats.ilp is not None
+    assert compiled.stats.ilp.method == "greedy"
+    assert compiled.stats.n_kernels < compiled.stats.n_ops
+    ref = build_reference_fn(g)(inputs)
+    out = compiled(inputs)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_stitched_function_rejects_bad_mode():
+    with pytest.raises(ValueError, match="mode"):
+        StitchedFunction(lambda x: x, mode="nope")
