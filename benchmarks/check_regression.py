@@ -63,6 +63,13 @@ SERVING_METRICS = (
     (("static", "tokens_per_sec"), "static_tokens_per_sec", "higher"),
 )
 
+# The "measured" section is schema-checked, not value-gated: interpret-mode
+# wall clock is too noisy to gate, but losing the measured-timing record
+# entirely (the timer silently disabled, the section dropped from the
+# harness) must fail loudly — it is the perf trajectory's ground truth.
+MEASURED_REQUIRED_KEYS = ("rmsnorm_us", "softmax_us", "exec")
+MEASURED_EXEC_KEYS = ("measured_s", "modeled_time_s", "calls")
+
 # json paths inside the top-level "sharding" section
 SHARDING_METRICS = (
     (("grad_local", "kernels", "stitch"), "grad_local_stitched_kernels", "lower"),
@@ -148,7 +155,31 @@ def compare(baseline: dict, candidate: dict, tolerance: float = TOLERANCE,
                   failures, lines)
     _gate_section(baseline, candidate, "sharding", SHARDING_METRICS,
                   tolerance, failures, lines)
+    check_measured_schema(baseline, candidate, failures, lines)
     return failures, lines
+
+
+def check_measured_schema(baseline: dict, candidate: dict, failures,
+                          lines) -> None:
+    """Fail loudly when the candidate lacks the measured-timing section (or
+    its required keys); the values themselves stay ungated."""
+    if not isinstance(baseline.get("measured"), dict):
+        return                            # baseline predates this section
+    meas = candidate.get("measured")
+    if not isinstance(meas, dict):
+        failures.append("measured: section missing from candidate record "
+                        "(measured-kernel timing was not captured)")
+        return
+    missing = [k for k in MEASURED_REQUIRED_KEYS if k not in meas]
+    exec_rec = meas.get("exec")
+    if isinstance(exec_rec, dict):
+        missing += [f"exec.{k}" for k in MEASURED_EXEC_KEYS
+                    if k not in exec_rec]
+    if missing:
+        failures.append(f"measured: keys missing from candidate record: "
+                        f"{', '.join(missing)}")
+        return
+    lines.append("measured,schema,-,-,-,OK (values not gated)")
 
 
 def main(argv=None) -> int:

@@ -28,6 +28,7 @@ import dataclasses
 import threading
 import time
 
+from repro import obs
 from repro.core.compiler import CompiledGraph, FusionStats, StitchCompiler, _Group
 from repro.core.cost import HardwareModel, TPU_V5E
 from repro.core.ir import Graph
@@ -314,6 +315,14 @@ class CompilationService:
         with self._lock:
             return self.errors.get(key)
 
+    def error_report(self) -> dict[str, str]:
+        """Every recorded background failure, keyed by a stable readable
+        string (``graph_key/bucket/mode/hw/placement``) — what the unified
+        ``StitchedFunction.report()['errors']`` exposes."""
+        with self._lock:
+            return {"/".join(str(p) for p in key): msg
+                    for key, msg in self.errors.items()}
+
     def compile(self, g: Graph, placement: str = "") -> CompiledGraph:
         """Blocking cache-aware full compile (offline / warmup path)."""
         return self.compiler("stitch", placement).compile(g)
@@ -334,6 +343,11 @@ class CompilationService:
         stitch = self.compiler("stitch", placement)
         sig = compute_signature(g)
         hit = self.cache.lookup(g, stitch, sig=sig)
+        # one hit-or-miss event per compiled graph: timeline evidence of
+        # which requests replayed a plan and which served the fallback
+        obs.event("cache.hit" if hit is not None else "cache.miss",
+                  cat="cache", graph=g.name, placement=placement,
+                  bucket=sig.bucket_key(self.cache.bucket_policy))
         if hit is not None:
             return hit, "hit"
         fallback = self.compiler(self.fallback_mode).compile(g)
@@ -364,14 +378,20 @@ class CompilationService:
                 return False
             self._pending.add(key)
         stitch = self.compiler("stitch", placement)
+        obs.event("compile.start", cat="compile", graph=g.name,
+                  placement=placement, background=True)
 
         def _upgrade():
             try:
-                stitch.compile(g, bypass_cache_lookup=True)
+                with obs.span("compile.background", cat="compile",
+                              graph=g.name, placement=placement):
+                    stitch.compile(g, bypass_cache_lookup=True)
             except Exception as e:          # surfaced via last_error / report
                 with self._lock:
                     self.last_error = f"{type(e).__name__}: {e}"
                     self.errors[key] = self.last_error
+                obs.event("compile.fail", cat="compile", graph=g.name,
+                          placement=placement, error=self.last_error)
             finally:
                 with self._lock:
                     self._pending.discard(key)

@@ -27,6 +27,8 @@ from typing import Callable, Mapping
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 from .codegen import build_reference_fn, eval_node
 from .cost import CostModel, HardwareModel, PatternScore, TPU_V5E
 from .fusiongen import GenConfig, generate_patterns, substitution_fusion
@@ -239,10 +241,15 @@ class StitchCompiler:
                 if len(grp) >= 2
             ]
             return pats, None
-        patterns = generate_patterns(g, self.gen_cfg)
+        with obs.span("compile.pattern_gen", cat="compile", graph=g.name) as s:
+            patterns = generate_patterns(g, self.gen_cfg)
+            s.set(patterns=len(patterns))
         scores = [self.cost.score(p).score for p in patterns]
-        result = solve_fusion_plan(g, patterns, scores,
-                                   budget_seconds=self.plan_budget)
+        with obs.span("compile.ilp", cat="compile", graph=g.name,
+                      patterns=len(patterns)) as s:
+            result = solve_fusion_plan(g, patterns, scores,
+                                       budget_seconds=self.plan_budget)
+            s.set(method=result.method, chosen=len(result.chosen))
         return result.chosen, result
 
     # -- modeled whole-graph time (Table 3's perf metric) ----------------------
@@ -258,6 +265,11 @@ class StitchCompiler:
         return total
 
     def compile(self, g: Graph, *, bypass_cache_lookup: bool = False) -> CompiledGraph:
+        with obs.span("compile.graph", cat="compile", graph=g.name,
+                      mode=self.mode, placement=self.placement) as osp:
+            return self._compile(g, bypass_cache_lookup, osp)
+
+    def _compile(self, g: Graph, bypass_cache_lookup, osp) -> CompiledGraph:
         t0 = _time.perf_counter()
         g.validate()
         cached = self.cache is not None and self.mode == "stitch"
@@ -268,6 +280,7 @@ class StitchCompiler:
                 hit = self.cache.lookup(g, self, sig=sig)
                 if hit is not None:
                     hit.stats.compile_seconds = _time.perf_counter() - t0
+                    osp.set(cache="hit", n_kernels=hit.stats.n_kernels)
                     return hit
         chosen, ilp = self.plan(g)
         covered: set[str] = set()
@@ -279,24 +292,26 @@ class StitchCompiler:
             mode=self.mode, n_ops=len(g.compute_nodes()), n_kernels=0, ilp=ilp
         )
 
-        for p in chosen:
-            stats.pattern_classes[p.pattern_class] = (
-                stats.pattern_classes.get(p.pattern_class, 0) + 1
-            )
-            tuned = None
-            if self.mode == "stitch" and self.use_pallas:
-                tuned = self.tuner.tune(p)
-            if tuned is not None:
-                groups.append(_Group(p.members, "pallas", tuned))
-                stats.pallas_groups += 1
-                stats.scratch_requested += sum(
-                    self.cost.scratch_request(p).values()
+        with obs.span("compile.tune", cat="compile", graph=g.name,
+                      patterns=len(chosen)):
+            for p in chosen:
+                stats.pattern_classes[p.pattern_class] = (
+                    stats.pattern_classes.get(p.pattern_class, 0) + 1
                 )
-                stats.scratch_allocated += tuned.scratch_plan.allocated
-                if tuned.scratch_plan.allocated:
-                    stats.patterns_with_scratch += 1
-            else:
-                groups.append(_Group(p.members, "jnp"))
+                tuned = None
+                if self.mode == "stitch" and self.use_pallas:
+                    tuned = self.tuner.tune(p)
+                if tuned is not None:
+                    groups.append(_Group(p.members, "pallas", tuned))
+                    stats.pallas_groups += 1
+                    stats.scratch_requested += sum(
+                        self.cost.scratch_request(p).values()
+                    )
+                    stats.scratch_allocated += tuned.scratch_plan.allocated
+                    if tuned.scratch_plan.allocated:
+                        stats.patterns_with_scratch += 1
+                else:
+                    groups.append(_Group(p.members, "jnp"))
 
         # singleton groups for uncovered compute ops
         for node in g.compute_nodes():
@@ -307,10 +322,19 @@ class StitchCompiler:
         stats.modeled_time = self.modeled_time(g, [grp.members for grp in groups])
         stats.compile_seconds = _time.perf_counter() - t0
         compiled = CompiledGraph(g, groups, stats)
+        osp.set(cache=stats.cache_status, n_kernels=stats.n_kernels,
+                modeled_time_s=stats.modeled_time)
         if cached:
             stats.cache_status = "miss"
             self.cache.insert(
                 g, compiled, sig=sig, solve_seconds=stats.compile_seconds,
                 compiler=self,
             )
+            # the plan is now available for replay: every poller's next
+            # lookup upgrades — this is the moment a compile "lands"
+            obs.event("compile.land", cat="compile", graph=g.name,
+                      placement=self.placement,
+                      n_kernels=stats.n_kernels,
+                      modeled_time_s=stats.modeled_time,
+                      compile_seconds=stats.compile_seconds)
         return compiled

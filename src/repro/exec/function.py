@@ -37,6 +37,7 @@ and reports but serves jit (the serving engine's ``stitch_execute=False``);
 
 from __future__ import annotations
 
+import time
 import warnings
 from typing import Any, Callable
 
@@ -44,6 +45,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import obs
+from repro.obs import timer as _ktimer
 
 __all__ = ["StitchedFunction", "shard_wrap", "stitch", "tree_avals"]
 
@@ -205,6 +209,9 @@ class StitchedFunction:
         self.stitched_calls = 0          # served through the compiled artifact
         self.fallback_calls = 0          # drift / trace failure -> jit
         self.jit_calls = 0               # by-design jit ("jit"/"shadow" modes)
+        # path -> measured-wall-clock Histogram, populated only while the
+        # opt-in kernel timer (repro.obs.timer) is enabled
+        self._measured: dict[str, obs.Histogram] = {}
 
     # -- argument plumbing -----------------------------------------------------
     def _split(self, args):
@@ -249,6 +256,8 @@ class StitchedFunction:
         sp.in_sig = self._in_sig(dyn, kwargs)
         sp.placement = self._placement_override
         bound = self._bind(statics)
+        tsp = obs.span("exec.trace", cat="exec", fn=self.name, mode=self.mode)
+        tsp.__enter__()
         try:
             axis_env = None
             targs = ((dyn, kwargs),)
@@ -293,6 +302,9 @@ class StitchedFunction:
             sp.graph = None
             sp.compiled = None
             sp.executable = False
+        finally:
+            tsp.set(status=sp.status, placement=sp.placement)
+            tsp.__exit__(None, None, None)
         return sp
 
     def _get(self, statics, dyn, kwargs) -> _Specialization:
@@ -313,6 +325,12 @@ class StitchedFunction:
         if hit is not None:
             sp.compiled = hit
             sp.status = "hit"
+            # the acceptance-critical marker: this call flips from the XLA
+            # fallback to the stitched artifact mid-flight
+            obs.event("exec.upgrade", cat="exec", fn=self.name,
+                      placement=sp.placement,
+                      n_kernels=hit.stats.n_kernels,
+                      modeled_time_s=hit.stats.modeled_time)
             return
         err = svc.error_for(sp.sig, sp.placement)
         if err is not None:
@@ -400,21 +418,49 @@ class StitchedFunction:
                             and not leaf.is_deleted()):
                         leaf.delete()
 
+    def _observe(self, path: str, fn, *call_args):
+        """Span + opt-in measured timer around one served call.  Both
+        tracer and timer off (the default) is a two-attribute-read
+        passthrough, so the serving hot path pays nothing unobserved."""
+        if not (obs.tracer.enabled or _ktimer.enabled):
+            return fn(*call_args)
+        with obs.span(f"exec.{self.name}", cat="exec", path=path):
+            if not _ktimer.enabled:
+                return fn(*call_args)
+            t0 = time.perf_counter()
+            out = fn(*call_args)
+            # bracket device execution, not just async dispatch
+            jax.block_until_ready(out)
+            self._record_measured(path, time.perf_counter() - t0)
+            return out
+
+    def _record_measured(self, path: str, measured_s: float) -> None:
+        h = self._measured.get(path)
+        if h is None:
+            h = self._measured[path] = obs.Histogram()
+        h.observe(measured_s)
+        sp = self._active
+        modeled = None
+        if path == "stitched" and sp is not None and sp.compiled is not None:
+            modeled = sp.compiled.stats.modeled_time
+        _ktimer.record(self.name, path, measured_s, modeled_s=modeled,
+                       placement=sp.placement if sp is not None else "")
+
     def __call__(self, *args, **kwargs):
         statics, dyn = self._split(args)
         if self.mode == "jit":
             self.jit_calls += 1
-            return self._jit_call(args, dyn, kwargs)
+            return self._observe("jit", self._jit_call, args, dyn, kwargs)
         sp = self._get(statics, dyn, kwargs)
         if not sp.ok or sp.in_sig != self._in_sig(dyn, kwargs):
             self.fallback_calls += 1
-            return self._jit_call(args, dyn, kwargs)
+            return self._observe("fallback", self._jit_call, args, dyn, kwargs)
         if self.mode != "offline":
             self._poll(sp)
         if self.mode == "shadow":
             self.jit_calls += 1
-            return self._jit_call(args, dyn, kwargs)
-        out = self._run(sp, dyn, kwargs)
+            return self._observe("jit", self._jit_call, args, dyn, kwargs)
+        out = self._observe("stitched", self._run, sp, dyn, kwargs)
         self.stitched_calls += 1
         if self.donate_argnums:
             self._donate(args, out)
@@ -468,26 +514,39 @@ class StitchedFunction:
                 "cache_status": s.cache_status}
 
     def report(self) -> dict:
-        """Fallback/stitched call counts, plan + kernel stats, cache hit
-        rates, and any background-compile failure."""
+        """Call routing, plan + kernel stats, cache hit rates, every
+        background-compile failure, and measured kernel timing — one dict
+        conforming to :data:`repro.obs.EXEC_REPORT_SCHEMA` (see
+        :mod:`repro.obs.report` for the documented key table)."""
         out: dict[str, Any] = {
+            "schema": obs.EXEC_REPORT_SCHEMA,
+            "name": self.name,
             "status": self.status,
             "mode": self.mode,
+            "calls": {"stitched": self.stitched_calls,
+                      "fallback": self.fallback_calls,
+                      "jit": self.jit_calls},
+            # compatibility aliases — prefer ``calls``
             "stitched_calls": self.stitched_calls,
             "fallback_calls": self.fallback_calls,
             "jit_calls": self.jit_calls,
             "specializations": len(self._specs),
+            "placement": (self._active.placement
+                          if self._active is not None else ""),
+            "plan": self.plan_stats(),
+            "error": (self._active.error
+                      if self._active is not None else None),
+            "errors": {},
+            "cache": None,
+            "service_error": None,
+            "measured": ({p: h.summary()
+                          for p, h in sorted(self._measured.items())}
+                         if self._measured else None),
         }
-        plan = self.plan_stats()
-        if plan is not None:
-            out["plan"] = plan
-        if self._active is not None:
-            out["placement"] = self._active.placement
-            if self._active.error:
-                out["error"] = self._active.error
         if self.service is not None:
             out["cache"] = self.service.cache.report()
             out["service_error"] = self.service.last_error
+            out["errors"] = self.service.error_report()
         return out
 
     def wait(self, timeout: float | None = None) -> None:

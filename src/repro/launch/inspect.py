@@ -1,0 +1,186 @@
+"""Offline inspector for observability artifacts — trace files, cache
+directories, metrics snapshots.
+
+A stitched run leaves three artifacts behind (`--trace-out`,
+``--cache-dir``, ``--metrics-json`` on the train/serve drivers); this CLI
+reads them back without re-running anything:
+
+    # compile timeline + modeled-vs-measured table from a trace file
+    PYTHONPATH=src python -m repro.launch.inspect trace.json
+
+    # persisted fusion-plan records in a StitchCache directory
+    PYTHONPATH=src python -m repro.launch.inspect --cache-dir /tmp/stitch
+
+    # a metrics-registry snapshot
+    PYTHONPATH=src python -m repro.launch.inspect --metrics metrics.json
+
+The trace view answers the two questions an upgrade-latency investigation
+always starts with: *when did each stitch compile land relative to the
+serving steps* (the compile timeline, with cache hit/miss and
+fallback→stitched upgrade markers inline), and *did the measured kernel
+time agree with the cost model* (the per-plan modeled-vs-measured table,
+built from the ``exec.measured`` events the opt-in timer records).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+from pathlib import Path
+
+
+def _fmt_ms(us: float) -> str:
+    return f"{us / 1e3:10.3f}"
+
+
+def _load_events(path: str) -> list[dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc["traceEvents"] if isinstance(doc, dict) else doc
+    return [e for e in events if e.get("ph") != "M"]
+
+
+# -- trace views ---------------------------------------------------------------
+COMPILE_NAMES = ("compile.graph", "compile.background", "compile.pattern_gen",
+                 "compile.ilp", "compile.tune", "compile.start",
+                 "compile.land", "compile.fail", "cache.hit", "cache.miss",
+                 "exec.upgrade", "exec.trace")
+
+
+def compile_timeline(events: list[dict]) -> list[str]:
+    """Chronological compile/cache/upgrade activity, one line per event."""
+    rows = [e for e in events if e.get("name") in COMPILE_NAMES]
+    rows.sort(key=lambda e: e.get("ts", 0.0))
+    lines = [f"{'t_ms':>10}  {'dur_ms':>10}  {'event':24}  detail",
+             "-" * 78]
+    for e in rows:
+        args = e.get("args", {})
+        detail = " ".join(
+            f"{k}={args[k]}" for k in
+            ("graph", "fn", "placement", "cache", "bucket", "n_kernels",
+             "modeled_time_s", "status", "method", "error")
+            if k in args and args[k] not in ("", None))
+        dur = _fmt_ms(e["dur"]) if e.get("ph") == "X" else " " * 10
+        lines.append(f"{_fmt_ms(e.get('ts', 0.0))}  {dur}  "
+                     f"{e['name']:24}  {detail}")
+    if len(lines) == 2:
+        lines.append("(no compile/cache events in this trace — was the run "
+                     "traced with --stitch?)")
+    return lines
+
+
+def measured_table(events: list[dict]) -> list[str]:
+    """Per-(fn, path, placement) modeled-vs-measured from ``exec.measured``
+    events; ratio > 1 means the kernel ran slower than the cost model
+    promised."""
+    groups: dict[tuple, list[dict]] = defaultdict(list)
+    for e in events:
+        if e.get("name") == "exec.measured":
+            a = e.get("args", {})
+            groups[(a.get("fn", "?"), a.get("path", "?"),
+                    a.get("placement") or "")].append(a)
+    if not groups:
+        return ["(no exec.measured events — run with the kernel timer "
+                "enabled, e.g. --trace-out on the serve/train drivers)"]
+    lines = [f"{'fn':16} {'path':10} {'calls':>6} {'measured_ms':>12} "
+             f"{'modeled_ms':>11} {'ratio':>7}  placement",
+             "-" * 78]
+    for (fn, path, placement), rows in sorted(groups.items()):
+        meas = [float(r["measured_s"]) for r in rows if "measured_s" in r]
+        mods = [float(r["modeled_s"]) for r in rows
+                if r.get("modeled_s") is not None]
+        mean_meas = sum(meas) / len(meas) if meas else 0.0
+        mean_mod = sum(mods) / len(mods) if mods else None
+        ratio = (f"{mean_meas / mean_mod:7.2f}"
+                 if mean_mod else "      -")
+        mod_str = f"{mean_mod * 1e3:11.4f}" if mean_mod else "          -"
+        lines.append(f"{fn:16} {path:10} {len(rows):>6} "
+                     f"{mean_meas * 1e3:12.4f} {mod_str} {ratio}  "
+                     f"{placement}")
+    return lines
+
+
+def trace_summary(events: list[dict]) -> list[str]:
+    counts: dict[str, int] = defaultdict(int)
+    for e in events:
+        counts[e.get("name", "?")] += 1
+    return [f"{n:28} {c:>6}" for n, c in sorted(counts.items())]
+
+
+# -- cache-dir view ------------------------------------------------------------
+def cache_table(directory: str) -> list[str]:
+    files = sorted(Path(directory).glob("plan_*.json"))
+    if not files:
+        return [f"(no plan_*.json records under {directory})"]
+    lines = [f"{'graph':12} {'bucket':12} {'mode':6} {'hw':8} {'nodes':>5} "
+             f"{'groups':>6} {'solve_s':>8}  placement",
+             "-" * 78]
+    for p in files:
+        try:
+            with open(p) as f:
+                d = json.load(f)
+        except (json.JSONDecodeError, OSError) as e:
+            lines.append(f"{p.name}: unreadable ({e})")
+            continue
+        lines.append(
+            f"{d.get('graph_key', '?')[:12]:12} "
+            f"{d.get('bucket_key', '?')[:12]:12} "
+            f"{d.get('mode', '?'):6} {d.get('hw', '?'):8} "
+            f"{d.get('n_nodes', 0):>5} {len(d.get('groups', ())):>6} "
+            f"{d.get('solve_seconds', 0.0):>8.3f}  "
+            f"{d.get('placement', '')}")
+    lines.append(f"{len(files)} record(s)")
+    return lines
+
+
+# -- metrics view --------------------------------------------------------------
+def metrics_view(path: str) -> list[str]:
+    with open(path) as f:
+        snap = json.load(f)
+    lines: list[str] = []
+    for section in ("counters", "gauges"):
+        for name, v in sorted(snap.get(section, {}).items()):
+            lines.append(f"{name:48} {v:g}")
+    for name, s in sorted(snap.get("histograms", {}).items()):
+        lines.append(f"{name:48} count={s.get('count', 0):g} "
+                     f"mean={s.get('mean', 0.0):g} p50={s.get('p50', 0.0):g} "
+                     f"p99={s.get('p99', 0.0):g}")
+    for name in sorted(snap.get("providers", {})):
+        lines.append(f"provider: {name}")
+    return lines or ["(empty snapshot)"]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="inspect stitching observability artifacts offline")
+    ap.add_argument("trace", nargs="?", default=None,
+                    help="Chrome-trace JSON written by --trace-out")
+    ap.add_argument("--cache-dir", default=None,
+                    help="StitchCache directory: print the persisted "
+                         "fusion-plan records")
+    ap.add_argument("--metrics", default=None,
+                    help="metrics snapshot written by --metrics-json")
+    args = ap.parse_args(argv)
+    if not (args.trace or args.cache_dir or args.metrics):
+        ap.error("nothing to inspect: give a trace file, --cache-dir, "
+                 "or --metrics")
+
+    out: list[str] = []
+    if args.trace:
+        events = _load_events(args.trace)
+        out += [f"== trace: {args.trace} ({len(events)} events) ==", ""]
+        out += ["-- event counts --"] + trace_summary(events) + [""]
+        out += ["-- compile timeline --"] + compile_timeline(events) + [""]
+        out += ["-- modeled vs measured --"] + measured_table(events) + [""]
+    if args.cache_dir:
+        out += [f"== cache: {args.cache_dir} ==", ""]
+        out += cache_table(args.cache_dir) + [""]
+    if args.metrics:
+        out += [f"== metrics: {args.metrics} ==", ""]
+        out += metrics_view(args.metrics) + [""]
+    print("\n".join(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -168,9 +168,21 @@ def main():
     ap.add_argument("--host-devices", type=int, default=None,
                     help="force N host-platform devices (see module "
                          "docstring)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(enables span tracing AND the measured kernel "
+                         "timer; load the file at https://ui.perfetto.dev)")
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the obs metrics-registry snapshot (counters/"
+                         "histograms + serve/stitch reports) as JSON at exit")
     args = ap.parse_args()
     if args.max_len is None:
         args.max_len = args.prompt_len + args.new_tokens
+
+    from repro import obs
+    if args.trace_out:
+        obs.enable_tracing()
+        obs.enable_timing()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg)
@@ -193,6 +205,15 @@ def main():
     if args.stitch:
         print("stitch_report:")
         print(json.dumps(eng.stitch_report(), indent=2, default=str))
+    if args.trace_out:
+        print(f"trace: {obs.save_trace(args.trace_out)} "
+              f"({len(obs.tracer)} events)")
+    if args.metrics_json:
+        reg = obs.registry()
+        reg.register_provider("serve", eng.serve_report)
+        reg.register_provider("stitch", eng.stitch_report)
+        reg.to_json(args.metrics_json, report=report)
+        print(f"metrics: {args.metrics_json}")
 
 
 def _serve_audio(args, cfg, model, params):

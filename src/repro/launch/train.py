@@ -83,7 +83,19 @@ def main():
     ap.add_argument("--host-devices", type=int, default=None,
                     help="force N host-platform devices (must be first-"
                          "parsed before jax init; see module docstring)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(enables span tracing AND the measured kernel "
+                         "timer; load the file at https://ui.perfetto.dev)")
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the obs metrics-registry snapshot (plus the "
+                         "stitched step report) as JSON at exit")
     args = ap.parse_args()
+
+    from repro import obs
+    if args.trace_out:
+        obs.enable_tracing()
+        obs.enable_timing()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     over = {}
@@ -187,6 +199,15 @@ def main():
         placements = rep.get("cache", {}).get("per_placement")
         if placements:
             print(f"stitch cache per-placement: {placements}")
+    if args.trace_out:
+        print(f"trace: {obs.save_trace(args.trace_out)} "
+              f"({len(obs.tracer)} events)")
+    if args.metrics_json:
+        reg = obs.registry()
+        if stitched is not None:
+            reg.register_provider("train", stitched.report)
+        reg.to_json(args.metrics_json)
+        print(f"metrics: {args.metrics_json}")
 
 
 if __name__ == "__main__":

@@ -238,16 +238,23 @@ class PackedAdamW:
         return c.stats.n_kernels if c is not None else None
 
     def report(self) -> dict:
-        out: dict[str, Any] = {"status": self.status,
-                               "n_leaves": self.layout.n_leaves,
-                               "rows": self.layout.rows}
+        """The unified exec report (:data:`repro.obs.EXEC_REPORT_SCHEMA`)
+        plus the packing-specific ``n_leaves`` / ``rows``.  On the pure-jnp
+        path (``use_compiler=False``) there is no exec layer; ``status`` is
+        ``"jnp"`` and the exec keys are their empty defaults."""
         if self._exec is not None:
-            plan = self._exec.plan_stats()
-            if plan is not None:
-                out["plan"] = plan
-            rep = self._exec.report()
-            if "error" in rep:
-                out["error"] = rep["error"]
+            out = self._exec.report()
+        else:
+            from repro.obs import EXEC_REPORT_SCHEMA
+            out = {"schema": EXEC_REPORT_SCHEMA, "name": "packed_adamw",
+                   "mode": "jnp", "status": self.status,
+                   "calls": {"stitched": 0, "fallback": 0, "jit": 0},
+                   "specializations": 0, "placement": self.placement,
+                   "plan": None, "error": None, "errors": {},
+                   "cache": None, "measured": None}
+        out["status"] = self.status          # "jnp" override when no exec
+        out["n_leaves"] = self.layout.n_leaves
+        out["rows"] = self.layout.rows
         return out
 
     # -- miss-then-upgrade polling --------------------------------------------

@@ -167,9 +167,9 @@ class Engine:
 
     def stitch_report(self) -> dict:
         """Upgrade status, plan stats, call counts, cache hit rates, and
-        any background-compile failure (see ``"error"``)."""
-        if self.stitch_service is None:
-            return {"status": None}
+        every background-compile failure — the unified
+        :data:`repro.obs.EXEC_REPORT_SCHEMA` dict, also in pure-jit mode
+        (where ``cache``/``errors`` are empty)."""
         return self._exec.report()
 
     # -- continuous batching ---------------------------------------------------

@@ -5,6 +5,12 @@ The scheduler emits one :class:`StepMetrics` per decode step; the
 :class:`~repro.serve.queue.FinishedRequest` records into the numbers an
 operator actually watches: occupancy, queue depth, useful tokens/sec, and
 end-to-end / time-to-first-token latency percentiles.
+
+The percentile math lives in :func:`repro.obs.metrics.percentiles` (the one
+shared implementation repo-wide); it is re-exported here for the existing
+callers.  Latency summaries are always present in :meth:`ServeMetrics.
+summary` — an empty run reports all-zero percentiles rather than missing
+keys, so downstream schema checks never special-case short runs.
 """
 
 from __future__ import annotations
@@ -12,6 +18,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 import numpy as np
+
+from repro.obs.metrics import percentiles
 
 from .queue import FinishedRequest
 
@@ -37,13 +45,6 @@ class StepMetrics:
     @property
     def occupancy(self) -> float:
         return self.active / self.slots if self.slots else 0.0
-
-
-def percentiles(values, ps=(50, 95, 99)) -> dict[str, float]:
-    if not len(values):
-        return {f"p{p}": 0.0 for p in ps}
-    arr = np.asarray(values, np.float64)
-    return {f"p{p}": float(np.percentile(arr, p)) for p in ps}
 
 
 @dataclass
@@ -81,13 +82,14 @@ class ServeMetrics:
             "admissions": sum(m.admissions for m in steps),
             "evictions": sum(m.evictions for m in steps),
         }
-        if self.finished:
-            out["e2e_latency_s"] = percentiles([f.e2e_latency for f in self.finished])
-            out["ttft_s"] = percentiles([f.ttft for f in self.finished])
-            out["queue_latency_s"] = percentiles(
-                [f.queue_latency for f in self.finished])
-            out["finish_reasons"] = {
-                r: sum(1 for f in self.finished if f.finish_reason == r)
-                for r in sorted({f.finish_reason for f in self.finished})
-            }
+        # always present (all-zero for an empty run): downstream schema
+        # checks must not have to special-case short runs
+        out["e2e_latency_s"] = percentiles([f.e2e_latency for f in self.finished])
+        out["ttft_s"] = percentiles([f.ttft for f in self.finished])
+        out["queue_latency_s"] = percentiles(
+            [f.queue_latency for f in self.finished])
+        out["finish_reasons"] = {
+            r: sum(1 for f in self.finished if f.finish_reason == r)
+            for r in sorted({f.finish_reason for f in self.finished})
+        }
         return out

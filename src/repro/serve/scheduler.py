@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.cache.policy import BucketPolicy
 
 from .metrics import ServeMetrics, StepMetrics
@@ -176,6 +177,8 @@ class Scheduler:
             finish_time=self.clock(),
             admit_step=slot_state.admit_step, finish_step=step)
         self.metrics.record_finished(fin)
+        obs.event("serve.evict", cat="serve", rid=req.rid, reason=reason,
+                  step=step, tokens=len(slot_state.tokens))
         return fin
 
     def _admit(self, slot: int, req: Request) -> tuple[int, int]:
@@ -186,9 +189,11 @@ class Scheduler:
         pb = self.bucket_len(P)
         padded = np.zeros((1, pb), np.int32)
         padded[0, :P] = req.prompt
-        logits, pcache = self._prefill_fn(pb, req.extra)(
-            self.params, jnp.asarray(padded),
-            jnp.asarray([P], jnp.int32), **req.extra)
+        with obs.span("serve.prefill", cat="serve", rid=req.rid,
+                      prompt_len=P, bucket=pb, slot=slot):
+            logits, pcache = self._prefill_fn(pb, req.extra)(
+                self.params, jnp.asarray(padded),
+                jnp.asarray([P], jnp.int32), **req.extra)
         first = int(jnp.argmax(logits, axis=-1)[0])
         state = _Slot(req=req, tokens=[first], admit_time=self.clock(),
                       admit_step=self.step_count)
@@ -235,6 +240,8 @@ class Scheduler:
     def step(self) -> StepMetrics:
         t0 = self.clock()
         step = self.step_count
+        ssp = obs.span("serve.step", cat="serve", step=step)
+        ssp.__enter__()
         admissions, tokens, evictions = self._refill()
         active = self.n_active
 
@@ -280,6 +287,14 @@ class Scheduler:
             step_seconds=self.clock() - t0, stitch_status=self.status_fn())
         self.metrics.record_step(m)
         self.step_count += 1
+        ssp.set(active=active, admissions=admissions, evictions=evictions,
+                tokens=tokens, queue_depth=m.queue_depth,
+                stitch_status=m.stitch_status)
+        ssp.__exit__(None, None, None)
+        # a Perfetto counter track per series: occupancy + queue over time
+        obs.counter_event("serve.slots", cat="serve", active=active,
+                          free=self.cfg.slots - active,
+                          queue_depth=m.queue_depth)
         return m
 
     def drain(self, max_steps: int | None = None) -> list[FinishedRequest]:

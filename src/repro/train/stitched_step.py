@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.exec import shard_wrap, stitch, tree_avals as _avals
 from repro.models.api import Model
 from repro.optim import adamw
@@ -210,26 +211,34 @@ class StitchedTrainStep:
 
     # -- observability --------------------------------------------------------
     def report(self) -> dict:
+        """``grad`` and ``optimizer`` are each a full unified exec report
+        (:data:`repro.obs.EXEC_REPORT_SCHEMA`) — the same shape the serving
+        engine's ``stitch_report()`` returns — plus the training-level
+        ``fallback_steps`` / ``mesh`` / ``cache`` context."""
         out: dict[str, Any] = {
-            "grad": {"status": self._grad.status if self._grad else None},
-            "optimizer": self._packed.report() if self._packed else {"status": None},
+            "grad": (self._grad.report() if self._grad is not None
+                     else {"status": None}),
+            "optimizer": (self._packed.report() if self._packed is not None
+                          else {"status": None}),
             "fallback_steps": self.fallback_steps,
         }
         if self.mesh is not None:
             out["mesh"] = dict(self.mesh.shape)
-        if self._grad is not None and self._grad.plan_stats() is not None:
-            out["grad"]["plan"] = self._grad.plan_stats()
         if self.service is not None:
             out["cache"] = self.service.cache.report()
             out["service_error"] = self.service.last_error
-        if self._grad is not None:
-            rep = self._grad.report()
-            if "error" in rep:
-                out["grad"]["error"] = rep["error"]
         return out
 
     # -- the step --------------------------------------------------------------
     def __call__(self, state: TrainState, batch) -> tuple[TrainState, dict]:
+        if not obs.tracer.enabled:
+            return self._step(state, batch)
+        with obs.span("train.step", cat="train") as s:
+            out = self._step(state, batch)
+            s.set(fallback_steps=self.fallback_steps)
+            return out
+
+    def _step(self, state: TrainState, batch) -> tuple[TrainState, dict]:
         if not self._prepared:
             self._prepare(state, batch)
         if self.mesh is not None:

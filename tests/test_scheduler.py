@@ -286,3 +286,37 @@ def test_check_regression_gates_sharding_section():
     failures, _ = compare(base, worse)
     assert len(failures) == 3
     assert any("mesh_keyed_entries" in f and "exactly" in f for f in failures)
+
+
+def test_check_regression_measured_schema_checked_not_gated():
+    """When the baseline carries the measured-timing section, a candidate
+    that dropped it (timer silently disabled) fails the gate; the values
+    themselves are never compared, only the schema."""
+    from benchmarks.check_regression import compare
+    measured = {"rmsnorm_us": {"oracle_jit": 5.0, "stitched_interpret": 900.0},
+                "softmax_us": {"oracle_jit": 4.0, "stitched_interpret": 800.0},
+                "exec": {"measured_s": {"count": 3, "mean": 1e-3},
+                         "modeled_time_s": 2e-5, "calls": 3}}
+    base = {"workloads": {}, "measured": measured}
+
+    # wildly different values: schema-checked only, so still a pass
+    slower = {"rmsnorm_us": {"oracle_jit": 250.0, "stitched_interpret": 45000.0},
+              "softmax_us": {"oracle_jit": 200.0, "stitched_interpret": 40000.0},
+              "exec": {"measured_s": {"count": 3, "mean": 5e-2},
+                       "modeled_time_s": 2e-5, "calls": 3}}
+    failures, lines = compare(base, {"workloads": {}, "measured": slower})
+    assert failures == []
+    assert any("values not gated" in ln for ln in lines)
+
+    # losing the section entirely is lost coverage — fail loudly
+    failures, _ = compare(base, {"workloads": {}})
+    assert len(failures) == 1 and "measured" in failures[0]
+
+    # as is losing a required key inside it
+    broken = dict(measured, exec={"calls": 3})
+    failures, _ = compare(base, {"workloads": {}, "measured": broken})
+    assert any("exec.measured_s" in f for f in failures)
+
+    # a baseline predating the section gates nothing (legacy records)
+    failures, _ = compare({"workloads": {}}, {"workloads": {}})
+    assert failures == []
