@@ -7,7 +7,10 @@ baseline.
 Metric specs are **direction-aware** — ``(json path, label, direction)``
 where direction is ``"lower"`` (kernel counts, modeled times: growth beyond
 tolerance fails), ``"higher"`` (throughputs: a drop beyond tolerance
-fails), or ``"exact"`` (structural counts that must not drift at all).
+fails), ``"exact"`` (structural counts that must not drift at all), or
+``"positive"`` (liveness gates: the candidate value must be > 0 regardless
+of the baseline — a zero prefix-cache hit rate or zero stitched-prefill
+kernels means the feature silently stopped engaging).
 
 Gated sections:
 
@@ -21,7 +24,9 @@ Gated sections:
   are the only *wall-clock* gated metrics: best-of-reps in the harness
   damps within-machine jitter, and ``--serving-tolerance`` (default: the
   global tolerance) lets CI widen just these against a baseline recorded
-  on different hardware without loosening the deterministic gates;
+  on different hardware without loosening the deterministic gates.  The
+  prefix-heavy sub-run adds two liveness gates (positive): the
+  prefix-cache hit rate and the stitched-prefill kernel count;
 * **sharding** — per-shard stitched kernel counts / modeled times of the
   mesh-placed backward and packed-update graphs (lower), and the count of
   distinct mesh-keyed cache entries (exact: losing a placement means two
@@ -61,6 +66,12 @@ TRAINING_METRICS = (
 SERVING_METRICS = (
     (("continuous", "tokens_per_sec"), "continuous_tokens_per_sec", "higher"),
     (("static", "tokens_per_sec"), "static_tokens_per_sec", "higher"),
+    # liveness, not wall clock: the prefix cache must actually hit and the
+    # bucketed prefills must actually carry stitched plans
+    (("prefix", "prefix_cache", "hit_rate"), "prefix_cache_hit_rate",
+     "positive"),
+    (("prefix", "prefill", "n_kernels"), "prefill_stitched_kernels",
+     "positive"),
 )
 
 # The "measured" section is schema-checked, not value-gated: interpret-mode
@@ -91,6 +102,24 @@ def _get(d: dict, path) -> float | None:
 def _gate_metric(b, c, label, direction, tolerance, failures, lines,
                  row_name):
     """One direction-aware comparison; appends to failures/lines."""
+    if direction == "positive":
+        # liveness gates judge the candidate alone; a baseline that
+        # predates the metric skips it (same rule as whole sections),
+        # but a candidate that lost it is lost coverage
+        if b is None and c is None:
+            return
+        if c is None:
+            failures.append(f"{row_name}.{label}: metric missing "
+                            f"from candidate (baseline={b:g})")
+            return
+        verdict = "OK"
+        if c <= 0:
+            verdict = "REGRESSION"
+            failures.append(f"{row_name}.{label}: candidate {c:g} "
+                            f"(must be > 0)")
+        b_str = f"{b:g}" if b is not None else "-"
+        lines.append(f"{row_name},{label},{b_str},{c:g},-,{verdict}")
+        return
     if b is None or c is None:
         failures.append(f"{row_name}.{label}: metric missing "
                         f"(baseline={b}, candidate={c})")

@@ -8,13 +8,14 @@ cache facade / miss-then-upgrade compilation service (:mod:`.service`).
 
 from .policy import BucketPolicy, BucketStats, EvictionPolicy
 from .signature import (GraphSignature, compute_signature, node_struct_hashes,
-                        placement_key)
+                        placement_key, token_prefix_keys)
 from .store import DiskStore, GroupRecord, MemoryStore, PlanRecord, TwoTierStore
 from .service import CompilationService, StitchCache, extract_record, replay_record
 
 __all__ = [
     "BucketPolicy", "BucketStats", "EvictionPolicy",
     "GraphSignature", "compute_signature", "node_struct_hashes", "placement_key",
+    "token_prefix_keys",
     "DiskStore", "GroupRecord", "MemoryStore", "PlanRecord", "TwoTierStore",
     "CompilationService", "StitchCache", "extract_record", "replay_record",
 ]

@@ -55,6 +55,7 @@ __all__ = [
     "compute_signature",
     "node_struct_hashes",
     "placement_key",
+    "token_prefix_keys",
     "RUNTIME_ONLY_ATTRS",
     "SHAPE_DEPENDENT_ATTRS",
 ]
@@ -163,6 +164,27 @@ class GraphSignature:
         """Digest of shapes after the policy's coarsening."""
         bucketed = tuple(policy.bucket_shape(s) for s in self.shapes)
         return _digest(repr(bucketed))
+
+
+def token_prefix_keys(tokens, page_size: int) -> list[str]:
+    """Chained content hashes of a token sequence at page granularity — the
+    key half of the serving layer's prefix cache.
+
+    ``keys[i]`` digests tokens ``[0, min((i+1)*page_size, len))`` *through
+    the chain*: it commits to every earlier page, so two prompts share
+    ``keys[i]`` iff their first ``i+1`` pages are token-identical (the
+    vLLM-style block-hash chain).  The final key covers the whole sequence
+    including a partial tail page, making it a whole-prompt content key.
+    """
+    toks = np.ascontiguousarray(np.asarray(tokens, np.int64).reshape(-1))
+    if toks.size == 0:
+        raise ValueError("token_prefix_keys: empty token sequence")
+    h = hashlib.sha1(str(page_size).encode())
+    keys = []
+    for start in range(0, toks.size, page_size):
+        h.update(toks[start:start + page_size].tobytes())
+        keys.append(h.hexdigest()[:16])
+    return keys
 
 
 def placement_key(mesh=None, specs=None) -> str:

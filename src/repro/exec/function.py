@@ -37,8 +37,10 @@ and reports but serves jit (the serving engine's ``stitch_execute=False``);
 
 from __future__ import annotations
 
+import hashlib
 import time
 import warnings
+from collections import OrderedDict
 from typing import Any, Callable
 
 import jax
@@ -170,8 +172,8 @@ class StitchedFunction:
     def __init__(self, fn: Callable, *, mode: str = "stitch", service=None,
                  mesh: Mesh | None = None, in_specs=None, out_specs=None,
                  donate_argnums=(), static_argnums=(),
-                 eligibility_argnums=None, placement: str = "",
-                 name: str | None = None):
+                 eligibility_argnums=None, respecialize: int = 0,
+                 placement: str = "", name: str | None = None):
         if mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
         self.fn = fn
@@ -180,6 +182,16 @@ class StitchedFunction:
         self.mesh = mesh if (mesh is not None and mesh.size > 1) else None
         self.static_argnums = tuple(sorted(set(static_argnums)))
         self.donate_argnums = tuple(sorted(set(donate_argnums)))
+        # respecialize=N: a new input signature (shape/structure drift)
+        # traces a NEW specialization instead of falling back to jit —
+        # jit-like shape polymorphism through the fusion pipeline, bounded
+        # at N live specializations (LRU eviction).  The serving engine's
+        # bucketed prefill dispatch is the canonical user: each pow2 bucket
+        # lands its own placement-keyed plan.
+        self.respecialize = int(respecialize)
+        if self.respecialize and mesh is not None:
+            raise ValueError("respecialize is not supported together with "
+                             "mesh dispatch")
         # args whose avals the per-call drift check covers (None = all).
         # Callers with an operand that is fixed for the function's lifetime
         # (e.g. the serving engine's params) exclude it so the hot-path
@@ -206,6 +218,10 @@ class StitchedFunction:
         self._jit_plain = jax.jit(fn, static_argnums=self.static_argnums,
                                   donate_argnums=self.donate_argnums)
         self._jit_sharded: dict = {}     # (treedef, avals) -> jit(shard_map)
+        # with respecialize, jit-served signatures get their OWN jit
+        # instance in a same-cap LRU: evicting an entry drops its compiled
+        # executable too, so jit/shadow modes are as bounded as stitch mode
+        self._jit_lru: OrderedDict = OrderedDict()
         self.stitched_calls = 0          # served through the compiled artifact
         self.fallback_calls = 0          # drift / trace failure -> jit
         self.jit_calls = 0               # by-design jit ("jit"/"shadow" modes)
@@ -255,6 +271,13 @@ class StitchedFunction:
         sp = _Specialization()
         sp.in_sig = self._in_sig(dyn, kwargs)
         sp.placement = self._placement_override
+        if self.respecialize:
+            # per-signature placement: each specialization (e.g. each pow2
+            # prefill bucket) gets its own cache entry/plan even when the
+            # bucket policy would coarsen their shapes together
+            digest = hashlib.sha1(repr(sp.in_sig).encode()).hexdigest()[:8]
+            base = self._placement_override or self.name
+            sp.placement = f"{base}@{digest}"
         bound = self._bind(statics)
         tsp = obs.span("exec.trace", cat="exec", fn=self.name, mode=self.mode)
         tsp.__enter__()
@@ -307,11 +330,24 @@ class StitchedFunction:
             tsp.__exit__(None, None, None)
         return sp
 
+    def _spec_key(self, statics, dyn, kwargs):
+        if not self.respecialize:
+            return statics
+        return (statics, self._in_sig(dyn, kwargs))
+
     def _get(self, statics, dyn, kwargs) -> _Specialization:
-        sp = self._specs.get(statics)
+        key = self._spec_key(statics, dyn, kwargs)
+        sp = self._specs.get(key)
         if sp is None:
             sp = self._trace(statics, dyn, kwargs)
-            self._specs[statics] = sp
+            self._specs[key] = sp
+        elif self.respecialize:
+            self._specs[key] = self._specs.pop(key)      # LRU touch
+        while self.respecialize and len(self._specs) > self.respecialize:
+            evicted = next(iter(self._specs))
+            if evicted == key:                           # never evict current
+                break
+            del self._specs[evicted]
         self._active = sp
         return sp
 
@@ -382,6 +418,18 @@ class StitchedFunction:
         return jax.tree_util.tree_unflatten(sp.out_tree, flat)
 
     def _jit_call(self, args, dyn, kwargs):
+        if self.respecialize and self.mesh is None:
+            key = self._in_sig(dyn, kwargs)
+            fn = self._jit_lru.get(key)
+            if fn is None:
+                fn = jax.jit(self.fn, static_argnums=self.static_argnums,
+                             donate_argnums=self.donate_argnums)
+            else:
+                self._jit_lru.pop(key)               # LRU touch
+            self._jit_lru[key] = fn
+            while len(self._jit_lru) > self.respecialize:
+                self._jit_lru.popitem(last=False)
+            return fn(*args, **kwargs)
         if self.mesh is not None and not kwargs:
             # signature-keyed memo holds the shardable/unshardable decision
             # too, so the spec callable (a pytree walk) runs once per
@@ -480,7 +528,7 @@ class StitchedFunction:
         """True when a call with these arguments would execute through the
         compiled artifact (already traced, executable, signature match)."""
         statics, dyn = self._split(args)
-        sp = self._specs.get(statics)
+        sp = self._specs.get(self._spec_key(statics, dyn, kwargs))
         return (sp is not None and sp.ok
                 and sp.in_sig == self._in_sig(dyn, kwargs))
 
@@ -507,11 +555,37 @@ class StitchedFunction:
     def plan_stats(self) -> dict | None:
         if self._active is None or self._active.compiled is None:
             return None
-        s = self._active.compiled.stats
+        return self._plan_stats(self._active)
+
+    @staticmethod
+    def _plan_stats(sp: _Specialization) -> dict | None:
+        if sp.compiled is None:
+            return None
+        s = sp.compiled.stats
         return {"mode": s.mode, "n_kernels": s.n_kernels, "n_ops": s.n_ops,
                 "pallas_groups": s.pallas_groups,
                 "modeled_time": s.modeled_time,
                 "cache_status": s.cache_status}
+
+    def land_plans(self, timeout: float | None = None) -> int:
+        """Join background compiles and poll EVERY specialization's upgrade
+        (``_poll`` only tracks the active one) until no compile is in
+        flight; returns how many specializations still lack a stitched
+        plan.  Benches and tests use this to read deterministic per-bucket
+        kernel counts out of :meth:`report`."""
+        if self.mode in ("jit", "offline") or self.service is None:
+            return 0
+        for _ in range(1 + len(self._specs)):
+            pending = 0
+            for sp in self._specs.values():
+                self._poll(sp)
+                if sp.status in ("miss", "pending"):
+                    pending += 1
+            if not pending:
+                break
+            self.service.wait(timeout)
+        return sum(sp.status in ("miss", "pending", "failed", "error")
+                   for sp in self._specs.values())
 
     def report(self) -> dict:
         """Call routing, plan + kernel stats, cache hit rates, every
@@ -531,9 +605,16 @@ class StitchedFunction:
             "fallback_calls": self.fallback_calls,
             "jit_calls": self.jit_calls,
             "specializations": len(self._specs),
+            "specialization_cap": self.respecialize or None,
+            "jit_specializations": len(self._jit_lru),
             "placement": (self._active.placement
                           if self._active is not None else ""),
             "plan": self.plan_stats(),
+            # per-specialization plans (placement-keyed) — with
+            # ``respecialize`` each shape bucket reports its own
+            "plans": {sp.placement: {"status": sp.status,
+                                     "plan": self._plan_stats(sp)}
+                      for sp in self._specs.values()},
             "error": (self._active.error
                       if self._active is not None else None),
             "errors": {},
@@ -558,7 +639,8 @@ class StitchedFunction:
 def stitch(fn: Callable, *, mode: str = "stitch", service=None,
            mesh: Mesh | None = None, in_specs=None, out_specs=None,
            donate_argnums=(), static_argnums=(), eligibility_argnums=None,
-           placement: str = "", name: str | None = None) -> StitchedFunction:
+           respecialize: int = 0, placement: str = "",
+           name: str | None = None) -> StitchedFunction:
     """Wrap ``fn`` for execution through the FusionStitching pipeline —
     the jit-like public entry point of the repo.
 
@@ -580,6 +662,11 @@ def stitch(fn: Callable, *, mode: str = "stitch", service=None,
       eligibility_argnums: restrict the per-call shape-drift check to these
         args (default all) — for operands fixed over the function's
         lifetime, keeping the hot-path check cheap.
+      respecialize: N > 0 makes a drifted input signature trace a NEW
+        specialization (own graph, own placement-keyed plan) instead of
+        serving through jit — jit-like shape polymorphism, LRU-bounded at N
+        live specializations.  The serving engine routes its pow2-bucketed
+        prefills through this.  Incompatible with ``mesh``.
       placement: explicit cache-placement override for bodies that run
         inside someone else's ``shard_map`` (e.g. the packed optimizer).
       name: graph name for dumps, cache records, and warnings.
@@ -590,4 +677,4 @@ def stitch(fn: Callable, *, mode: str = "stitch", service=None,
         fn, mode=mode, service=service, mesh=mesh, in_specs=in_specs,
         out_specs=out_specs, donate_argnums=donate_argnums,
         static_argnums=static_argnums, eligibility_argnums=eligibility_argnums,
-        placement=placement, name=name)
+        respecialize=respecialize, placement=placement, name=name)

@@ -101,6 +101,44 @@ def measured_table(events: list[dict]) -> list[str]:
     return lines
 
 
+def serve_timeline(events: list[dict]) -> list[str]:
+    """Prefill activity against page-pool occupancy: every ``serve.prefill``
+    span/hit-marker interleaved with the ``serve.pages`` counter samples the
+    scheduler emits per step, plus an inline occupancy bar.  Answers "was
+    that admission a prefix hit, and what did it do to the pool?" without
+    loading Perfetto."""
+    rows = [e for e in events
+            if e.get("name") in ("serve.prefill", "serve.pages")]
+    rows.sort(key=lambda e: e.get("ts", 0.0))
+    if not rows:
+        return ["(no serve.prefill/serve.pages events — paged continuous "
+                "serving emits them when traced)"]
+    cap = max((e["args"].get("used", 0) + e["args"].get("free", 0)
+               for e in rows if e.get("name") == "serve.pages"),
+              default=0)
+    lines = [f"{'t_ms':>10}  {'dur_ms':>10}  {'event':14}  detail",
+             "-" * 78]
+    for e in rows:
+        args = e.get("args", {})
+        if e["name"] == "serve.pages":
+            used = args.get("used", 0)
+            bar = "#" * round(12 * used / cap) if cap else ""
+            detail = (f"used={used}/{cap} {bar:<12}")
+        else:
+            detail = " ".join(
+                f"{k}={args[k]}" for k in
+                ("rid", "prompt_len", "bucket", "batch", "cached")
+                if k in args)
+        dur = _fmt_ms(e["dur"]) if e.get("ph") == "X" else " " * 10
+        lines.append(f"{_fmt_ms(e.get('ts', 0.0))}  {dur}  "
+                     f"{e['name']:14}  {detail}")
+    hits = sum(1 for e in rows if e["name"] == "serve.prefill"
+               and e.get("args", {}).get("cached"))
+    total = sum(1 for e in rows if e["name"] == "serve.prefill")
+    lines.append(f"{total} prefill(s), {hits} prefix-cache hit(s)")
+    return lines
+
+
 def trace_summary(events: list[dict]) -> list[str]:
     counts: dict[str, int] = defaultdict(int)
     for e in events:
@@ -172,6 +210,7 @@ def main(argv=None):
         out += [f"== trace: {args.trace} ({len(events)} events) ==", ""]
         out += ["-- event counts --"] + trace_summary(events) + [""]
         out += ["-- compile timeline --"] + compile_timeline(events) + [""]
+        out += ["-- serve timeline --"] + serve_timeline(events) + [""]
         out += ["-- modeled vs measured --"] + measured_table(events) + [""]
     if args.cache_dir:
         out += [f"== cache: {args.cache_dir} ==", ""]

@@ -65,21 +65,37 @@ def build_engine(args, cfg, model, params):
     eng = Engine(model, params, ServeConfig(
         batch=args.slots, max_len=args.max_len,
         max_new_tokens=args.new_tokens, eos_id=args.eos,
-        stitch_execute=args.stitch), stitch_service=svc, mesh=mesh)
+        stitch_execute=args.stitch,
+        paged=False if args.dense else None,
+        page_size=args.page_size, num_pages=args.num_pages,
+        prefix_cache=args.prefix_cache), stitch_service=svc, mesh=mesh)
     if mesh is not None:
         print(f"mesh={dict(mesh.shape)} dp_replicas={eng.dp_replicas}")
+    print(f"kv_layout={'paged' if eng.paged else 'dense'}"
+          + (f" page_size={args.page_size}" if eng.paged else "")
+          + (" prefix_cache=on" if args.prefix_cache else ""))
     return eng
 
 
 def make_workload(args, cfg):
-    """Ragged prompts + Poisson arrival offsets (open loop)."""
+    """Ragged prompts + Poisson arrival offsets (open loop).  With
+    ``--prefix-pool N`` the prompts are drawn from N distinct templates
+    (shared system prompts), making the trace prefix-heavy: every repeat
+    of a template is a whole-prompt prefix-cache hit."""
     rng = np.random.default_rng(args.seed)
     lo = max(1, args.prompt_len // 2)
     hi = max(lo + 1, args.prompt_len)
-    lens = rng.integers(lo, hi + 1, args.requests)
     news = rng.integers(max(1, args.new_tokens // 4), args.new_tokens + 1,
                         args.requests)
-    prompts = [rng.integers(0, cfg.vocab, (p,)).astype(np.int32) for p in lens]
+    if args.prefix_pool > 0:
+        pool_lens = rng.integers(lo, hi + 1, args.prefix_pool)
+        pool = [rng.integers(0, cfg.vocab, (p,)).astype(np.int32)
+                for p in pool_lens]
+        prompts = [pool[i] for i in rng.integers(0, len(pool), args.requests)]
+    else:
+        lens = rng.integers(lo, hi + 1, args.requests)
+        prompts = [rng.integers(0, cfg.vocab, (p,)).astype(np.int32)
+                   for p in lens]
     if args.rate > 0:
         arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
     else:
@@ -151,8 +167,23 @@ def main():
     ap.add_argument("--eos", type=int, default=-1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--stitch", action="store_true",
-                    help="serve decode through the stitched artifact "
-                         "(miss-then-upgrade)")
+                    help="serve decode AND bucketed prefills through the "
+                         "stitched artifact (miss-then-upgrade)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged-KV block size in tokens (paged is the "
+                         "default layout off-mesh)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="KV page-pool size (default: worst case, "
+                         "slots*ceil(max_len/page_size)+1)")
+    ap.add_argument("--dense", action="store_true",
+                    help="force the legacy dense per-slot KV rectangles")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-hashed prompt-KV reuse (paged only): "
+                         "repeated prompts skip prefill via a page-table "
+                         "splice")
+    ap.add_argument("--prefix-pool", type=int, default=0,
+                    help="draw prompts from N distinct templates (prefix-"
+                         "heavy trace; 0 = all prompts unique)")
     ap.add_argument("--cache-dir", default=None,
                     help="persistent StitchCache directory (with --stitch)")
     ap.add_argument("--plan-budget", type=float, default=None,
@@ -202,6 +233,9 @@ def main():
         report = run_static(args, eng, prompts, news)
     print(f"arch={cfg.name} mode={args.mode} slots={args.slots}")
     print(json.dumps(report, indent=2, default=float))
+    if args.prefix_cache and eng.prefix_cache is not None:
+        print("prefix_cache:")
+        print(json.dumps(eng.prefix_cache.report(), indent=2, default=float))
     if args.stitch:
         print("stitch_report:")
         print(json.dumps(eng.stitch_report(), indent=2, default=str))
@@ -212,6 +246,7 @@ def main():
         reg = obs.registry()
         reg.register_provider("serve", eng.serve_report)
         reg.register_provider("stitch", eng.stitch_report)
+        reg.register_provider("engine", eng.report)
         reg.to_json(args.metrics_json, report=report)
         print(f"metrics: {args.metrics_json}")
 

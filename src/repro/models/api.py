@@ -27,6 +27,10 @@ class Model:
     prefill: Callable[..., tuple]                 # (params, **inputs) -> (logits, cache)
     decode_step: Callable[..., tuple] | None      # (params, cache, tokens, **extra)
     init_cache: Callable[[int, int], Params] | None
+    # (num_pages, page_size) -> KV page pool for paged serving; None for
+    # families without a paged decode path (their cache is not a dense
+    # per-position KV rectangle)
+    init_paged_cache: Callable[[int, int], Params] | None = None
     # single-block forward (layer_params, x) -> x': the function-level entry
     # point for repro.exec.stitch() — lets any block be stitched standalone
     # without flowing through the train or serve machinery (see
@@ -136,7 +140,8 @@ def build_model(cfg: ModelConfig) -> Model:
             true_len=None, **kw: lm.prefill(
             p, tokens, cfg, max_len=max_len, patch_embeds=patch_embeds,
             true_len=true_len),
-        decode_step=lambda p, cache, tokens, **kw: lm.decode_step(
-            p, cache, tokens, cfg),
+        decode_step=lambda p, cache, tokens, kv_limit=None, **kw:
+            lm.decode_step(p, cache, tokens, cfg, kv_limit=kv_limit),
         init_cache=lambda b, s: lm.init_cache(cfg, b, s),
+        init_paged_cache=lambda n, ps: lm.init_paged_cache(cfg, n, ps),
     )

@@ -223,17 +223,47 @@ def apply_attention(
         # each slot writes its new KV at its own offset (vmapped
         # dynamic_update_slice lowers to one batched scatter).
         length = cache["length"]
-        if jnp.ndim(length):
+        if "page_table" in cache:
+            # Paged serving: the layer's KV lives in a shared page pool
+            # (n_pages, page_size, Hkv, dh); ``page_table`` (B, n) maps each
+            # slot's logical pages to pool pages.  Scatter the new token
+            # into each slot's current page, then gather the slot-dense
+            # view back out — the gathered view is value-identical to the
+            # dense cache at every unmasked position, so the attention math
+            # below (and the tokens) match the dense path bitwise.  Free
+            # slots' tables point at the reserved sink page 0, so their
+            # ride-along writes never touch a live page.
+            if S != 1:
+                raise NotImplementedError("paged decode is single-token")
+            pt = cache["page_table"]                  # (B, n_pages) int32
+            psz = cache["k"].shape[1]
+            phys = jnp.take_along_axis(pt, (length // psz)[:, None],
+                                       axis=1)[:, 0]
+            off = length % psz
+            pk = cache["k"].at[phys, off].set(k[:, 0].astype(cache["k"].dtype))
+            pv = cache["v"].at[phys, off].set(v[:, 0].astype(cache["v"].dtype))
+            new_cache = {"k": pk, "v": pv, "length": length + S}
+            n = pt.shape[1]
+            flat = pt.reshape(-1)
+            ck = jnp.take(pk, flat, axis=0).reshape(B, n * psz, Hkv, dh)
+            cv = jnp.take(pv, flat, axis=0).reshape(B, n * psz, Hkv, dh)
+            lim = cache.get("kv_limit")
+            if lim is not None and lim < n * psz:
+                # page capacity rounds max_len up to a page multiple; slice
+                # back so the softmax reduction shape matches dense exactly
+                ck, cv = ck[:, :lim], cv[:, :lim]
+        elif jnp.ndim(length):
             row_upd = lambda c, u, l: jax.lax.dynamic_update_slice(
                 c, u, (l, 0, 0))
             ck = jax.vmap(row_upd)(cache["k"], k.astype(cache["k"].dtype), length)
             cv = jax.vmap(row_upd)(cache["v"], v.astype(cache["v"].dtype), length)
+            new_cache = {"k": ck, "v": cv, "length": length + S}
         else:
             ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
                                               (0, length, 0, 0))
             cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
                                               (0, length, 0, 0))
-        new_cache = {"k": ck, "v": cv, "length": length + S}
+            new_cache = {"k": ck, "v": cv, "length": length + S}
         Smax = ck.shape[1]
         group = Hq // Hkv
         # grouped-GQA einsum against the cache at native Hkv width: no

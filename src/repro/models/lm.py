@@ -253,10 +253,22 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
     }
 
 
-def _decode_layer(h, xs, cfg: ModelConfig, positions, length):
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int) -> Params:
+    """KV page pool shared by all slots: per layer, ``num_pages`` fixed-size
+    pages.  The serving layer owns the page tables (see
+    :class:`repro.serve.kv.PagedKV`); the decode step only consumes them."""
+    shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads, cfg.dh)
+    return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+
+
+def _decode_layer(h, xs, cfg: ModelConfig, positions, length,
+                  page_table=None, kv_limit=None):
     lp, ck, cv = xs
     a_in = apply_norm(lp["norm1"], h, cfg)
     layer_cache = {"k": ck, "v": cv, "length": length}
+    if page_table is not None:
+        layer_cache["page_table"] = page_table
+        layer_cache["kv_limit"] = kv_limit
     attn_out, new_cache = apply_attention(lp["attn"], a_in, cfg, positions,
                                           cache=layer_cache)
     h = h + attn_out
@@ -271,17 +283,25 @@ def _decode_layer(h, xs, cfg: ModelConfig, positions, length):
 
 
 def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig,
-                patch_embeds=None):
+                patch_embeds=None, kv_limit=None):
     """tokens: (B, S_new) — S_new=1 for pure decode; larger for prefill.
-    Returns (logits_last, new_cache)."""
+    Returns (logits_last, new_cache).
+
+    A cache carrying ``page_table`` selects the paged path: ``k``/``v`` are
+    the shared page pool and each slot reads/writes through its page-table
+    row.  ``kv_limit`` (python int) slices the gathered per-slot view back
+    to the engine's max_len so the attention reduction shape — and hence
+    the tokens — match the dense layout bitwise."""
     B, S = tokens.shape
     length = cache["length"]
+    page_table = cache.get("page_table")
     base = length[:, None] if jnp.ndim(length) else length   # ragged: (B,) offsets
     positions = base + jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     h = embed_tokens(params, tokens, cfg, patch_embeds)
 
     def body(carry, xs):
-        return _decode_layer(carry, xs, cfg, positions, length)
+        return _decode_layer(carry, xs, cfg, positions, length,
+                             page_table=page_table, kv_limit=kv_limit)
 
     h, (nk, nv) = scan_or_unroll(body, h,
                                  (params["layers"], cache["k"], cache["v"]),
@@ -289,4 +309,6 @@ def decode_step(params: Params, cache: Params, tokens, cfg: ModelConfig,
     h = apply_norm(params["final_norm"], h, cfg)
     logits = (h[:, -1] @ _head_matrix(params, cfg)).astype(jnp.float32)
     new_cache = {"k": nk, "v": nv, "length": length + S}
+    if page_table is not None:
+        new_cache["page_table"] = page_table
     return logits, new_cache

@@ -1,11 +1,15 @@
 from .engine import Engine, ServeConfig
+from .kv import DenseKV, PageAllocator, PagedKV, PageExhausted, Prefix
 from .metrics import ServeMetrics, StepMetrics, percentiles
+from .prefix import PrefixCache
 from .queue import FinishedRequest, Request, RequestQueue
-from .scheduler import RAGGED_FAMILIES, Scheduler, SchedulerConfig
+from .scheduler import (ADMISSION_BUCKET, RAGGED_FAMILIES, Scheduler,
+                        SchedulerConfig)
 
 __all__ = [
-    "Engine", "ServeConfig",
-    "Scheduler", "SchedulerConfig", "RAGGED_FAMILIES",
+    "Engine", "ServeConfig", "Prefix",
+    "PagedKV", "DenseKV", "PageAllocator", "PageExhausted", "PrefixCache",
+    "Scheduler", "SchedulerConfig", "RAGGED_FAMILIES", "ADMISSION_BUCKET",
     "Request", "FinishedRequest", "RequestQueue",
     "ServeMetrics", "StepMetrics", "percentiles",
 ]

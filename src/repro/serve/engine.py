@@ -1,43 +1,43 @@
-"""Batched serving engine: prefill + greedy decode over a KV cache.
+"""Serving engine: three explicit stages over paged KV.
 
-Two serving modes share this engine:
+The public API is the disaggregated serving triple:
 
-* **Static batch** (:meth:`Engine.generate`) — requests are padded into one
-  fixed batch, prefilled once, then decoded lock-step.  With
-  ``prompt_lens`` the batch may be ragged: prompts are padded to a pow2
-  bucket, logits gathered at each row's true last position, and the decode
-  runs with a per-row length vector.
-* **Continuous batching** (:meth:`Engine.submit` / :meth:`Engine.step` /
-  :meth:`Engine.drain`) — a slot-based
-  :class:`~repro.serve.scheduler.Scheduler` admits queued requests into a
-  fixed-slot decode batch, interleaves bucketed prefills with ongoing
-  decode, evicts slots on EOS / max-token completion and refills them
-  immediately, so one long request never stalls the batch.
+* :meth:`Engine.prefill` — run one (possibly ragged) prompt batch through a
+  pow2-bucketed prefill and get a :class:`~repro.serve.kv.Prefix`: true
+  lengths, the greedy first token per row, and the bucketed KV.  Prefills
+  dispatch through :func:`repro.exec.stitch` with ``respecialize``: each
+  bucket is its own specialization with its own placement-keyed fusion
+  plan, so miss-then-upgrade, plan caching, and :meth:`Engine.report` cover
+  prefill exactly like decode.  With ``ServeConfig.prefix_cache`` a
+  repeated prompt (content-hashed at page granularity) skips the forward
+  pass entirely and returns a page-table reference into cached KV.
+* :meth:`Engine.insert` — bind one prefix row to a decode slot.  Paged
+  engines splice page tables (shared full pages are refcounted; only the
+  partial tail page is copied); dense engines splice the slot rectangle.
+* :meth:`Engine.generate_step` — advance every occupied slot ``steps``
+  greedy tokens through the one stitched decode step (one host readback
+  per chunk).  :meth:`Engine.release` frees a finished slot's pages.
 
-Both modes decode through ONE :func:`repro.exec.stitch`-produced step.
-The execution layer owns everything the engine used to hand-roll: tracing
-the decode step to StitchIR on first use, compile-or-fallback through the
-:class:`repro.cache.CompilationService` (a cache hit replays the stored
-fusion plan instantly; a miss serves the cheap XLA-mode fallback while the
-stitch pipeline runs on a background thread), per-call upgrade polling (so
-a continuous request stream upgrades mid-flight), shape/structure-drift
-fallback to jit, and — with ``mesh=`` — DP-replica ``shard_map`` dispatch:
-the slot dimension is sharded over the mesh's data-parallel axes for both
-the jitted and the stitched decode, with the stitched executable traced and
-solved at *shard-local* shapes under a mesh-keyed placement.  Admission
-prefills stay per-request (B=1) and unsharded.
+KV lives in :class:`~repro.serve.kv.PagedKV` (fixed-size pages + free-list
+allocator; the default off-mesh) or :class:`~repro.serve.kv.DenseKV` (the
+legacy per-slot rectangle; required under a mesh, where the decode batch is
+``shard_map``-sharded over DP replicas and a shared page pool is not
+slot-partitionable).  The paged decode gathers each slot's pages into a
+dense view and slices it back to ``max_len``, so paged and dense serving
+are token-for-token identical.
 
-``ServeConfig.stitch_execute`` selects the exec mode: ``True`` decodes
-through the stitched artifact (``"stitch"``); ``False`` keeps the jitted
-step serving while the stitched plan powers reporting and cache warmth
-(``"shadow"``); no service at all is pure (sharded) jit dispatch
-(``"jit"``).  A background compile that fails is surfaced once as a
-``RuntimeWarning`` and in :meth:`Engine.stitch_report` — the engine never
-silently serves the fallback forever.
+Legacy surfaces remain as thin shims: ``submit``/``step``/``drain``
+delegate to the :class:`~repro.serve.scheduler.Scheduler` (which itself
+drives prefill → insert → generate_step), ``generate(prompts,
+prompt_lens=...)`` stages a whole batch through the same three calls, and
+``generate(prompts)`` without lengths keeps the old rectangular
+cache-splice path behind a one-per-process ``DeprecationWarning``.
 """
 
 from __future__ import annotations
 
+import warnings
+from collections import OrderedDict
 from dataclasses import dataclass
 
 import jax
@@ -45,8 +45,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import obs
 from repro.exec import stitch
 from repro.models.api import Model
+
+from .kv import DenseKV, PagedKV, Prefix
+
+_LEGACY_RECT_WARNED = False
 
 
 @dataclass
@@ -56,6 +61,21 @@ class ServeConfig:
     max_new_tokens: int = 32
     eos_id: int = -1     # -1: never stop early (fixed-length benchmark mode)
     stitch_execute: bool = False   # run decode through the stitched artifact
+    # -- KV layout -------------------------------------------------------------
+    # None resolves to paged off-mesh (when the family has a paged layout)
+    # and dense under a mesh; True forces paged (errors with a mesh), False
+    # forces the legacy dense rectangles.
+    paged: bool | None = None
+    page_size: int = 16
+    # pool size; default slots*ceil(max_len/ps)+1 (doubled when the prefix
+    # cache is on, so cached pages aren't evicted by slot-demand pressure)
+    num_pages: int | None = None
+    # -- prefix cache ----------------------------------------------------------
+    prefix_cache: bool = False     # content-hashed prompt KV reuse (paged only)
+    prefix_cache_entries: int = 64
+    # -- prefill dispatch ------------------------------------------------------
+    # live prefill specializations (pow2 buckets x extra-structures), LRU
+    prefill_cache_size: int = 8
 
 
 class Engine:
@@ -78,11 +98,24 @@ class Engine:
                     f"the slot count to be a multiple of the DP size (or of "
                     f"the whole mesh)")
             self._slot_axes = axes
+        if cfg.paged and self.mesh is not None:
+            raise ValueError(
+                "paged KV is not supported under a mesh: the shared page "
+                "pool is not slot-partitionable across DP replicas (use "
+                "paged=False / the dense layout)")
+        self.paged = (cfg.paged if cfg.paged is not None
+                      else self.mesh is None
+                      and model.init_paged_cache is not None)
+        if cfg.prefix_cache and not self.paged:
+            raise ValueError("prefix_cache requires the paged KV layout")
+        # slot state (host-authoritative): last emitted token per slot and
+        # which slots hold a live request
+        self._tok = np.zeros((cfg.batch, 1), np.int32)
+        self._occupied: set[int] = set()
+        self._kv: PagedKV | DenseKV | None = None
+        self._prefix = None
         self._exec = self._build_exec()
-        self._ragged_prefill = jax.jit(
-            lambda p, toks, tl, ml, **kw: model.prefill(
-                p, toks, true_len=tl, max_len=ml, **kw),
-            static_argnames=("ml",))
+        self._prefill_exec = self._build_prefill_exec()
 
     # -- the one decode dispatch ----------------------------------------------
     def _build_exec(self):
@@ -100,9 +133,13 @@ class Engine:
         model = self.model
         mode = ("jit" if self.stitch_service is None
                 else "stitch" if self.cfg.stitch_execute else "shadow")
+        # python int closure constant: the paged decode slices its gathered
+        # per-slot KV view back to max_len so the attention reduction shape
+        # matches the dense layout bitwise (ignored by non-paged caches)
+        kvl = self.cfg.max_len if self.paged else None
 
         def decode_step(params, cache, tok, extra):
-            return model.decode_step(params, cache, tok, **extra)
+            return model.decode_step(params, cache, tok, kv_limit=kvl, **extra)
 
         # eligibility covers only (cache, tok, extra): params are fixed for
         # an engine's lifetime, so the per-token drift check stays cheap
@@ -127,6 +164,27 @@ class Engine:
                       mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       eligibility_argnums=elig, name="decode_step")
 
+    def _build_prefill_exec(self):
+        """The stitched prefill dispatch: one StitchedFunction whose
+        ``respecialize`` cap holds the live (bucket, extra-structure)
+        specializations — each pow2 bucket traces its own graph under its
+        own placement-keyed plan, LRU-bounded so a long-lived server with
+        drifting prompt lengths cannot accumulate compiles without bound
+        (the old per-bucket jit memo never evicted).  Admission prefills are
+        per-request and unsharded even on mesh engines, so this path never
+        takes the mesh."""
+        model = self.model
+        mode = ("jit" if self.stitch_service is None
+                else "stitch" if self.cfg.stitch_execute else "shadow")
+
+        def prefill_step(params, tokens, true_len, extra):
+            return model.prefill(params, tokens, true_len=true_len, **extra)
+
+        return stitch(prefill_step, mode=mode, service=self.stitch_service,
+                      eligibility_argnums=(1, 2, 3),
+                      respecialize=self.cfg.prefill_cache_size,
+                      name="prefill")
+
     def _decode_dispatch(self, cache, tok, extra):
         """One decode step through the shared execution layer — stitched
         artifact when eligible, jit otherwise, polling the background
@@ -144,6 +202,144 @@ class Engine:
             n *= self.mesh.shape[a]
         return n
 
+    # -- KV state --------------------------------------------------------------
+    @property
+    def kv(self) -> PagedKV | DenseKV:
+        """Slot KV, built lazily (rect-only engines never allocate it)."""
+        if self._kv is None:
+            if self.paged:
+                num_pages = self.cfg.num_pages
+                if num_pages is None and self.cfg.prefix_cache:
+                    # double the worst-case slot demand: without headroom
+                    # every insert's pool pressure would immediately evict
+                    # the entry the preceding prefill just registered
+                    import math
+                    pps = math.ceil(self.cfg.max_len / self.cfg.page_size)
+                    num_pages = 2 * self.cfg.batch * pps + 1
+                self._kv = PagedKV(self.model, self.cfg.batch,
+                                   self.cfg.max_len, self.cfg.page_size,
+                                   num_pages=num_pages)
+                if self.cfg.prefix_cache:
+                    from .prefix import PrefixCache
+                    self._prefix = PrefixCache(
+                        self._kv, max_entries=self.cfg.prefix_cache_entries)
+                    # pool pressure evicts cold prefix entries before failing
+                    self._kv.reclaim = self._prefix.evict_one
+            else:
+                self._kv = DenseKV(self.model, self.cfg.batch,
+                                   self.cfg.max_len)
+        return self._kv
+
+    @property
+    def prefix_cache(self):
+        """The content-hashed prompt-KV cache, or None when disabled."""
+        if self.cfg.prefix_cache and self._prefix is None:
+            _ = self.kv                     # builds the cache alongside KV
+        return self._prefix
+
+    # -- stage 1: prefill ------------------------------------------------------
+    def prefill(self, tokens, prompt_lens=None, extra=None,
+                rid: int | None = None) -> Prefix:
+        """Run a prompt batch (2-D, or a single 1-D prompt) through the
+        bucketed prefill; returns the :class:`Prefix` that ``insert`` binds
+        to a slot.  Single-row prompts first consult the prefix cache."""
+        from .scheduler import ADMISSION_BUCKET
+        extra = dict(extra or {})
+        toks = np.asarray(tokens, np.int32)
+        if toks.ndim == 1:
+            toks = toks[None]
+        B, Pn = toks.shape
+        if Pn == 0:
+            raise ValueError("prefill: empty prompt")
+        lens = (np.full((B,), Pn, np.int32) if prompt_lens is None
+                else np.asarray(prompt_lens, np.int32).reshape(-1))
+        if lens.shape != (B,) or int(lens.max()) > Pn or int(lens.min()) < 1:
+            raise ValueError(f"prompt_lens {lens!r} inconsistent with "
+                             f"prompts of shape {toks.shape}")
+        cacheable = (self.cfg.prefix_cache and B == 1 and not extra)
+        if cacheable:
+            hit = self.prefix_cache.lookup(toks[0, :int(lens[0])])
+            if hit is not None:
+                obs.event("serve.prefill", cat="serve",
+                          rid=-1 if rid is None else rid,
+                          prompt_len=int(lens[0]), cached=True)
+                return hit
+        pb = min(ADMISSION_BUCKET.bucket_dim(Pn), self.cfg.max_len)
+        padded = np.zeros((B, pb), np.int32)
+        padded[:, :Pn] = toks
+        with obs.span("serve.prefill", cat="serve",
+                      rid=-1 if rid is None else rid,
+                      prompt_len=int(lens.max()), bucket=pb, batch=B,
+                      cached=False):
+            logits, cache = self._prefill_exec(
+                self.params, jnp.asarray(padded), jnp.asarray(lens), extra)
+        first = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int64)
+        px = Prefix(lengths=lens, first_tokens=first, bucket=pb, kv=cache)
+        if cacheable:
+            self.prefix_cache.register(toks[0, :int(lens[0])], cache,
+                                       row=0, first_token=int(first[0]),
+                                       length=int(lens[0]))
+        return px
+
+    # -- stage 2: insert -------------------------------------------------------
+    def insert(self, prefix: Prefix, slot: int, row: int = 0) -> None:
+        """Bind row ``row`` of a prefix to decode slot ``slot``: a
+        page-table splice (shared pages refcounted, tail copied) for a
+        cached prefix, a KV splice otherwise."""
+        if not 0 <= slot < self.cfg.batch:
+            raise IndexError(f"slot {slot} out of range 0..{self.cfg.batch-1}")
+        if slot in self._occupied:
+            raise RuntimeError(f"slot {slot} already holds a request "
+                               f"(release it first)")
+        true_len = int(prefix.lengths[row])
+        if prefix.pages is not None:
+            self.kv.insert_shared(prefix.pages, prefix.tail, true_len, slot)
+        else:
+            self.kv.insert_kv(prefix.kv, row, true_len, slot)
+        self._tok[slot, 0] = int(prefix.first_tokens[row])
+        self._occupied.add(slot)
+
+    # -- stage 3: generate -----------------------------------------------------
+    def generate_step(self, steps: int = 1, extra: dict | None = None
+                      ) -> np.ndarray:
+        """Advance every occupied slot ``steps`` greedy tokens; returns the
+        (slots, steps) token matrix (free slots' rows are ride-along noise).
+        One host readback per call regardless of ``steps``."""
+        if not self._occupied:
+            raise RuntimeError("generate_step: no occupied slots "
+                               "(insert a prefix first)")
+        extra = dict(extra or {})
+        occ = sorted(self._occupied)
+        if self.paged:
+            for s in occ:
+                self.kv.ensure(s, steps)
+        cache = self.kv.decode_cache()
+        # copy: jnp.asarray may alias the numpy buffer, which is mutated
+        # below while the chunk is still in flight on some backends
+        tok = jnp.asarray(self._tok.copy())
+        toks_dev = []
+        for _ in range(steps):
+            logits, cache = self._decode_dispatch(cache, tok, extra)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            toks_dev.append(tok)
+        self.kv.absorb(cache)
+        self.kv.advance(occ, steps)
+        out = np.asarray(jnp.concatenate(toks_dev, axis=1))
+        for s in occ:
+            self._tok[s, 0] = int(out[s, -1])
+        return out
+
+    def release(self, slot: int) -> None:
+        """Free a finished slot: paged engines return its pages to the
+        allocator (decref for prefix-shared ones) immediately."""
+        self.kv.free(slot)
+        self._tok[slot, 0] = 0
+        self._occupied.discard(slot)
+
+    @property
+    def occupied(self) -> frozenset[int]:
+        return frozenset(self._occupied)
+
     # -- observability ---------------------------------------------------------
     @property
     def stitch_status(self) -> str | None:
@@ -155,7 +351,7 @@ class Engine:
 
     @property
     def _stitch(self) -> dict | None:
-        """Test/debug view of the active stitched specialization."""
+        """Test/debug view of the active stitched decode specialization."""
         sp = self._exec._active
         if sp is None:
             return None
@@ -166,25 +362,45 @@ class Engine:
                 "executable": sp.executable}
 
     def stitch_report(self) -> dict:
-        """Upgrade status, plan stats, call counts, cache hit rates, and
-        every background-compile failure — the unified
-        :data:`repro.obs.EXEC_REPORT_SCHEMA` dict, also in pure-jit mode
-        (where ``cache``/``errors`` are empty)."""
+        """The decode step's :data:`repro.obs.EXEC_REPORT_SCHEMA` dict —
+        upgrade status, plan stats, call counts, cache hit rates, and every
+        background-compile failure (also in pure-jit mode)."""
         return self._exec.report()
 
-    # -- continuous batching ---------------------------------------------------
+    def land_plans(self, timeout: float | None = None) -> int:
+        """Join background compiles for decode AND every live prefill
+        specialization; returns how many still lack a stitched plan
+        (benches use this before reading kernel counts)."""
+        return (self._exec.land_plans(timeout)
+                + self._prefill_exec.land_plans(timeout))
+
+    def report(self) -> dict:
+        """Engine-wide report: decode + prefill exec reports (the prefill
+        one carries per-bucket placement-keyed plans), KV/page-pool state,
+        prefix-cache hit rates, and the bounded prefill-memo size."""
+        prefill = self._prefill_exec.report()
+        entries = (prefill["specializations"] or
+                   prefill.get("jit_specializations", 0))
+        return {
+            "decode": self._exec.report(),
+            "prefill": prefill,
+            "kv": self._kv.report() if self._kv is not None else None,
+            "prefix_cache": (self._prefix.report()
+                             if self._prefix is not None else None),
+            "cache": {"prefill_entries": entries,
+                      "prefill_cap": self.cfg.prefill_cache_size},
+        }
+
+    # -- continuous batching (shim over the three-stage API) -------------------
     @property
     def scheduler(self):
-        """Lazy slot scheduler over this engine's decode dispatch."""
+        """Lazy slot scheduler driving prefill → insert → generate_step."""
         if self._scheduler is None:
             from .scheduler import Scheduler, SchedulerConfig
             cfg = SchedulerConfig(
                 slots=self.cfg.batch, max_len=self.cfg.max_len,
                 max_new_tokens=self.cfg.max_new_tokens, eos_id=self.cfg.eos_id)
-            self._scheduler = Scheduler(
-                self.model, self.params, cfg,
-                decode_fn=lambda cache, tok: self._decode_dispatch(cache, tok, {}),
-                status_fn=lambda: self.stitch_status)
+            self._scheduler = Scheduler(self, cfg)
         return self._scheduler
 
     def submit(self, prompt, max_new_tokens: int | None = None, **kw) -> int:
@@ -207,19 +423,29 @@ class Engine:
             return {}
         return self._scheduler.metrics.summary()
 
-    # -- static serving loop ---------------------------------------------------
+    # -- static serving (shims) ------------------------------------------------
     def generate(self, prompts: np.ndarray, prompt_lens=None, **extra) -> np.ndarray:
         """prompts: (batch, prompt_len) int32 -> (batch, max_new_tokens).
 
-        ``prompt_lens`` (per-row true lengths) switches to the ragged static
-        path: prompts are padded to the same pow2 bucket the continuous
-        scheduler admits at, logits come from each row's true last position,
-        and the decode runs with a per-row length vector — the per-request
-        reference the scheduler is tested token-for-token against."""
-        B, P = prompts.shape
+        With ``prompt_lens`` (per-row true lengths) the batch stages through
+        the three-stage API: one bucketed prefill, per-row slot inserts, a
+        chunked generate, then release — the per-request reference the
+        scheduler is tested token-for-token against.  Without it, the
+        legacy rectangular cache-splice path still serves (deprecated; it
+        bypasses paged KV, the prefix cache, and the stitched prefill)."""
+        B, Pn = prompts.shape
         assert B == self.cfg.batch
         if prompt_lens is not None:
-            return self._generate_ragged(prompts, prompt_lens, extra)
+            return self._generate_staged(prompts, prompt_lens, extra)
+        global _LEGACY_RECT_WARNED
+        if not _LEGACY_RECT_WARNED:
+            _LEGACY_RECT_WARNED = True
+            warnings.warn(
+                "Engine.generate(prompts) without prompt_lens uses the "
+                "legacy rectangular cache-splice path; migrate to "
+                "prefill()/insert()/generate_step() (or pass prompt_lens) — "
+                "see the README 'Serving' section", DeprecationWarning,
+                stacklevel=2)
         logits, cache = self.model.prefill(
             self.params, jnp.asarray(prompts, jnp.int32), **extra)
         # decode cache from prefill may be shorter than max_len; re-home it
@@ -230,13 +456,6 @@ class Engine:
             cache["v"] = jnp.pad(cache["v"], [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
 
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        return self._decode_loop(cache, tok, extra)
-
-    def _decode_loop(self, cache, tok, extra) -> np.ndarray:
-        """Lock-step greedy decode for ``max_new_tokens`` steps through the
-        shared dispatch (the exec layer re-checks eligibility and polls the
-        upgrade per step — numerics are identical across an upgrade, so a
-        mid-loop artifact swap is invisible in the tokens)."""
         out = []
         for _ in range(self.cfg.max_new_tokens):
             out.append(np.asarray(tok))
@@ -244,22 +463,24 @@ class Engine:
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         return np.concatenate(out, axis=1)
 
-    def _generate_ragged(self, prompts: np.ndarray, prompt_lens, extra) -> np.ndarray:
-        from .scheduler import ADMISSION_BUCKET, RAGGED_FAMILIES
+    def _generate_staged(self, prompts: np.ndarray, prompt_lens, extra) -> np.ndarray:
+        from .scheduler import RAGGED_FAMILIES
         if self.model.cfg.family not in RAGGED_FAMILIES:
             raise NotImplementedError(
                 f"ragged generate (prompt_lens) supports families "
                 f"{RAGGED_FAMILIES}, got {self.model.cfg.family!r}")
-        B, P = prompts.shape
-        lens = np.asarray(prompt_lens, np.int32).reshape(-1)
-        assert lens.shape == (B,) and int(lens.max()) <= P
-        # pad to the scheduler's admission bucket so a batch=1 ragged run is
-        # the scheduler's bitwise reference
-        pb = min(ADMISSION_BUCKET.bucket_dim(P), self.cfg.max_len)
-        padded = np.zeros((B, pb), np.int32)
-        padded[:, :P] = prompts
-        logits, cache = self._ragged_prefill(
-            self.params, jnp.asarray(padded), jnp.asarray(lens),
-            ml=self.cfg.max_len, **extra)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        return self._decode_loop(cache, tok, extra)
+        if self._occupied:
+            raise RuntimeError(
+                "generate(prompt_lens=...) needs an idle engine; "
+                f"slots {sorted(self._occupied)} hold live requests")
+        B, _ = prompts.shape
+        px = self.prefill(prompts, prompt_lens=prompt_lens, extra=extra)
+        for row in range(B):
+            self.insert(px, slot=row, row=row)
+        out = [px.first_tokens.astype(np.int32)[:, None]]
+        if self.cfg.max_new_tokens > 1:
+            out.append(self.generate_step(steps=self.cfg.max_new_tokens - 1,
+                                          extra=extra))
+        for row in range(B):
+            self.release(row)
+        return np.concatenate(out, axis=1)

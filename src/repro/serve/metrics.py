@@ -41,6 +41,7 @@ class StepMetrics:
     tokens: int                 # useful tokens emitted this step
     step_seconds: float
     stitch_status: str | None = None   # None|hit|miss|pending|error
+    prefix_hits: int = 0        # admissions served from the prefix cache
 
     @property
     def occupancy(self) -> float:
@@ -81,6 +82,7 @@ class ServeMetrics:
             "peak_queue_depth": max((m.queue_depth for m in steps), default=0),
             "admissions": sum(m.admissions for m in steps),
             "evictions": sum(m.evictions for m in steps),
+            "prefix_hits": sum(m.prefix_hits for m in steps),
         }
         # always present (all-zero for an empty run): downstream schema
         # checks must not have to special-case short runs

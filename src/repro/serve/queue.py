@@ -48,6 +48,7 @@ class FinishedRequest:
     finish_time: float
     admit_step: int
     finish_step: int
+    prefix_cached: bool = False           # admission KV came from the prefix cache
 
     @property
     def e2e_latency(self) -> float:

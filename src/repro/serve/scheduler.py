@@ -1,11 +1,12 @@
-"""Slot-based continuous-batching scheduler (the serving tentpole).
+"""Slot-based continuous-batching scheduler.
 
-The decode batch is a fixed array of ``slots``; each slot independently
-holds one in-flight request at its own sequence position.  The KV cache is
-a single batched pytree whose ``"length"`` leaf is a per-slot *vector* —
-the model's decode step (``dense`` / ``moe`` / ``vlm`` families) accepts it
-and writes each slot's new KV at its own offset, so one batched decode step
-advances every request regardless of where each one is in its stream.
+The scheduler is a thin orchestrator over the engine's three-stage API:
+admission is :meth:`Engine.prefill` (bucketed, stitched, prefix-cached) +
+:meth:`Engine.insert` (a page-table splice on paged engines), the decode is
+:meth:`Engine.generate_step` (one batched chunk over all slots), and
+eviction is :meth:`Engine.release` (pages return to the free list).  All
+model and KV mechanics live behind the engine; the scheduler owns only the
+FIFO queue, the per-slot request lifecycle, and the metrics stream.
 
 Lifecycle per :meth:`Scheduler.step`:
 
@@ -13,20 +14,17 @@ Lifecycle per :meth:`Scheduler.step`:
    a *bucketed* prefill: the prompt is right-padded to the next power-of-two
    length (same :class:`~repro.cache.policy.BucketPolicy` rule the
    StitchCache keys on), so a refill at a nearby prompt length replays the
-   already-compiled prefill executable — and, because the decode graph's
-   shapes never change, the stitched decode plan — instead of forcing a
-   recompile.  Causal masking makes the pad positions inert, and logits are
-   gathered at the true last position, so bucketing never changes tokens
-   (dense/vlm; see the moe capacity caveat on :data:`RAGGED_FAMILIES`).
-2. **Decode** — one batched step over all slots (inactive slots ride along;
-   their rows are ignored, and admission's slot write resets them).
+   already-compiled prefill specialization — and, because the decode
+   graph's shapes never change, the stitched decode plan — instead of
+   forcing a recompile.  Causal masking makes the pad positions inert, and
+   logits are gathered at the true last position, so bucketing never
+   changes tokens (dense/vlm; see the moe capacity caveat on
+   :data:`RAGGED_FAMILIES`).
+2. **Decode** — one batched chunk over all slots (inactive slots ride
+   along; their rows are ignored, and insert resets them).
 3. **Evict** — slots whose request hit EOS (``eos_id >= 0``) or its
-   per-request ``max_new_tokens`` are completed and freed; the next step's
-   refill reuses them immediately.
-
-The scheduler is deliberately model-API-thin: it is handed a
-``decode_fn(cache, tok) -> (logits, cache)`` (the engine injects its
-stitched-or-jitted dispatch there) and drives ``model.prefill`` itself.
+   per-request ``max_new_tokens`` are completed and released; the next
+   step's refill reuses them immediately.
 """
 
 from __future__ import annotations
@@ -35,8 +33,6 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
@@ -45,7 +41,8 @@ from repro.cache.policy import BucketPolicy
 from .metrics import ServeMetrics, StepMetrics
 from .queue import FinishedRequest, Request, RequestQueue
 
-__all__ = ["SchedulerConfig", "Scheduler", "RAGGED_FAMILIES"]
+__all__ = ["SchedulerConfig", "Scheduler", "RAGGED_FAMILIES",
+           "ADMISSION_BUCKET"]
 
 # families whose decode step supports a per-slot length vector AND whose
 # prefill is pad-invariant under causal masking (SSM/hybrid state mixes pad
@@ -56,8 +53,8 @@ __all__ = ["SchedulerConfig", "Scheduler", "RAGGED_FAMILIES"]
 # same coupling a static moe batch already has.  dense/vlm are exact.
 RAGGED_FAMILIES = ("dense", "moe", "vlm")
 
-# the admission bucket rule, shared with Engine._generate_ragged so the
-# static reference path pads exactly like the scheduler
+# the admission bucket rule, shared with Engine.prefill so the static
+# reference path pads exactly like the scheduler
 ADMISSION_BUCKET = BucketPolicy(mode="pow2", min_dim=1)
 
 
@@ -79,37 +76,30 @@ class _Slot:
     tokens: list[int]
     admit_time: float
     admit_step: int
+    prefix_cached: bool = False
 
 
 class Scheduler:
-    def __init__(self, model, params, cfg: SchedulerConfig,
-                 decode_fn: Callable, status_fn: Callable | None = None,
+    def __init__(self, engine, cfg: SchedulerConfig | None = None,
                  clock: Callable[[], float] = time.monotonic):
-        if model.cfg.family not in RAGGED_FAMILIES:
+        if engine.model.cfg.family not in RAGGED_FAMILIES:
             raise NotImplementedError(
                 f"continuous batching supports families {RAGGED_FAMILIES}, "
-                f"got {model.cfg.family!r} (its decode state is not "
+                f"got {engine.model.cfg.family!r} (its decode state is not "
                 f"pad-invariant / per-slot addressable)")
-        self.model = model
-        self.params = params
+        if cfg is None:
+            cfg = SchedulerConfig(
+                slots=engine.cfg.batch, max_len=engine.cfg.max_len,
+                max_new_tokens=engine.cfg.max_new_tokens,
+                eos_id=engine.cfg.eos_id)
+        self.engine = engine
         self.cfg = cfg
-        self.decode_fn = decode_fn
-        self.status_fn = status_fn or (lambda: None)
         self.clock = clock
 
         self.queue = RequestQueue()
         self.metrics = ServeMetrics()
-        cache = model.init_cache(cfg.slots, cfg.max_len)
-        cache = dict(cache)
-        cache["length"] = jnp.zeros((cfg.slots,), jnp.int32)
-        self.cache = cache
-        self.tok = np.zeros((cfg.slots, 1), np.int32)
         self.slots: list[_Slot | None] = [None] * cfg.slots
         self.step_count = 0
-        # one compiled prefill per (bucket length, extra-structure) — this
-        # memo is what bucketed admission exists to keep small
-        self._prefill_fns: dict[tuple, Callable] = {}
-        self._write_fns: dict[tuple, Callable] = {}
 
     # -- admission -------------------------------------------------------------
     def bucket_len(self, prompt_len: int) -> int:
@@ -133,38 +123,6 @@ class Scheduler:
         return self.queue.submit(prompt, n_new, rid=rid, arrival_time=at,
                                  extra=extra)
 
-    def _prefill_fn(self, pb: int, extra: dict) -> Callable:
-        key = (pb, tuple(sorted(extra)),
-               tuple((np.shape(v), str(np.asarray(v).dtype))
-                     for _, v in sorted(extra.items())))
-        fn = self._prefill_fns.get(key)
-        if fn is None:
-            fn = jax.jit(lambda p, toks, tl, **kw: self.model.prefill(
-                p, toks, true_len=tl, **kw))
-            self._prefill_fns[key] = fn
-        return fn
-
-    def _write_fn(self, pb: int) -> Callable:
-        """Jitted slot write: splice a (·, 1, pb, ·, ·) prefill cache into
-        row ``slot`` of the batched decode cache (traced index — one compile
-        per bucket, not per slot)."""
-        fn = self._write_fns.get(pb)
-        if fn is None:
-            def write(cache, pcache, slot):
-                out = dict(cache)
-                for k, leaf in cache.items():
-                    if k == "length":
-                        continue
-                    upd = pcache[k].astype(leaf.dtype)
-                    start = (0, slot) + (0,) * (leaf.ndim - 2)
-                    out[k] = jax.lax.dynamic_update_slice(leaf, upd, start)
-                out["length"] = cache["length"].at[slot].set(
-                    pcache["length"][0])
-                return out
-            fn = jax.jit(write)
-            self._write_fns[pb] = fn
-        return fn
-
     def _finish(self, slot_state: _Slot, reason: str, step: int) -> FinishedRequest:
         req = slot_state.req
         fin = FinishedRequest(
@@ -175,52 +133,46 @@ class Scheduler:
             admit_time=slot_state.admit_time,
             first_token_time=slot_state.admit_time,
             finish_time=self.clock(),
-            admit_step=slot_state.admit_step, finish_step=step)
+            admit_step=slot_state.admit_step, finish_step=step,
+            prefix_cached=slot_state.prefix_cached)
         self.metrics.record_finished(fin)
         obs.event("serve.evict", cat="serve", rid=req.rid, reason=reason,
                   step=step, tokens=len(slot_state.tokens))
         return fin
 
-    def _admit(self, slot: int, req: Request) -> tuple[int, int]:
-        """Bucketed prefill into ``slot``; returns (tokens_emitted, evictions)
-        — a request whose budget is 1 (or whose first token is EOS) finishes
-        at admission without ever occupying the slot."""
-        P = len(req.prompt)
-        pb = self.bucket_len(P)
-        padded = np.zeros((1, pb), np.int32)
-        padded[0, :P] = req.prompt
-        with obs.span("serve.prefill", cat="serve", rid=req.rid,
-                      prompt_len=P, bucket=pb, slot=slot):
-            logits, pcache = self._prefill_fn(pb, req.extra)(
-                self.params, jnp.asarray(padded),
-                jnp.asarray([P], jnp.int32), **req.extra)
-        first = int(jnp.argmax(logits, axis=-1)[0])
+    def _admit(self, slot: int, req: Request) -> tuple[int, int, int]:
+        """Prefill + insert into ``slot``; returns (tokens_emitted,
+        evictions, prefix_hits) — a request whose budget is 1 (or whose
+        first token is EOS) finishes at admission without ever occupying
+        the slot."""
+        px = self.engine.prefill(req.prompt, extra=req.extra, rid=req.rid)
+        first = int(px.first_tokens[0])
         state = _Slot(req=req, tokens=[first], admit_time=self.clock(),
-                      admit_step=self.step_count)
+                      admit_step=self.step_count, prefix_cached=px.cached)
+        hits = int(px.cached)
         eos = self.cfg.eos_id >= 0 and first == self.cfg.eos_id
         if eos or req.max_new_tokens == 1:
             self._finish(state, "eos" if eos else "length", self.step_count)
-            return 1, 1
-        self.cache = self._write_fn(pb)(self.cache, pcache,
-                                        jnp.asarray(slot, jnp.int32))
-        self.tok[slot, 0] = first
+            return 1, 1, hits
+        self.engine.insert(px, slot)
         self.slots[slot] = state
-        return 1, 0
+        return 1, 0, hits
 
-    def _refill(self) -> tuple[int, int, int]:
+    def _refill(self) -> tuple[int, int, int, int]:
         """Fill free slots from the queue; returns (admissions, tokens,
-        evictions)."""
-        admissions = tokens = evictions = 0
+        evictions, prefix_hits)."""
+        admissions = tokens = evictions = hits = 0
         for slot in range(self.cfg.slots):
             while self.slots[slot] is None and self.queue:
                 req = self.queue.pop()
-                t, e = self._admit(slot, req)
+                t, e, h = self._admit(slot, req)
                 admissions += 1
                 tokens += t
                 evictions += e
+                hits += h
                 if e == 0:
                     break               # slot now occupied
-        return admissions, tokens, evictions
+        return admissions, tokens, evictions, hits
 
     def _chunk_len(self) -> int:
         """Decode steps safely runnable before the next scheduling decision.
@@ -242,23 +194,15 @@ class Scheduler:
         step = self.step_count
         ssp = obs.span("serve.step", cat="serve", step=step)
         ssp.__enter__()
-        admissions, tokens, evictions = self._refill()
+        admissions, tokens, evictions, prefix_hits = self._refill()
         active = self.n_active
 
         if active:
             chunk = self._chunk_len()
-            cache, tok = self.cache, jnp.asarray(self.tok)
-            toks_dev = []
-            for _ in range(chunk):
-                logits, cache = self.decode_fn(cache, tok)
-                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-                toks_dev.append(tok)
-            self.cache = cache
             # the chunk's one host sync: token ids are needed for EOS /
-            # budget checks and the next iteration's input.  Free slots ride
-            # along (their rows are ignored and admission's slot write
-            # resets both KV and length), so nothing else syncs.
-            nxt = np.asarray(jnp.concatenate(toks_dev, axis=1))   # (slots, chunk)
+            # budget checks and the next iteration's input.  Free slots
+            # ride along inside the engine (their rows are ignored).
+            nxt = self.engine.generate_step(steps=chunk)   # (slots, chunk)
             for slot, state in enumerate(self.slots):
                 if state is None:
                     continue
@@ -275,16 +219,16 @@ class Scheduler:
                 if done is not None:
                     self._finish(state, done, step)
                     self.slots[slot] = None
+                    self.engine.release(slot)
                     evictions += 1
-                    self.tok[slot, 0] = 0
-                else:
-                    self.tok[slot, 0] = int(nxt[slot, -1])
 
         m = StepMetrics(
             step=step, active=active, slots=self.cfg.slots,
             queue_depth=len(self.queue), admissions=admissions,
             evictions=evictions, tokens=tokens,
-            step_seconds=self.clock() - t0, stitch_status=self.status_fn())
+            step_seconds=self.clock() - t0,
+            stitch_status=self.engine.stitch_status,
+            prefix_hits=prefix_hits)
         self.metrics.record_step(m)
         self.step_count += 1
         ssp.set(active=active, admissions=admissions, evictions=evictions,
@@ -295,6 +239,10 @@ class Scheduler:
         obs.counter_event("serve.slots", cat="serve", active=active,
                           free=self.cfg.slots - active,
                           queue_depth=m.queue_depth)
+        if self.engine.paged and self.engine._kv is not None:
+            alloc = self.engine.kv.allocator
+            obs.counter_event("serve.pages", cat="serve", used=alloc.used,
+                              free=alloc.free_count)
         return m
 
     def drain(self, max_steps: int | None = None) -> list[FinishedRequest]:

@@ -98,12 +98,12 @@ def test_bucketed_admission_reuses_prefill_compiles(setup):
                    max_new_tokens=2)
     eng.drain()
     sch = eng.scheduler
-    assert len(sch._prefill_fns) == 1
+    assert eng.report()["cache"]["prefill_entries"] == 1
     assert sch.bucket_len(5) == sch.bucket_len(8) == 8
     eng.submit(rng.integers(0, cfg.vocab, (9,)).astype(np.int32),
                max_new_tokens=2)   # bucket 16
     eng.drain()
-    assert len(sch._prefill_fns) == 2
+    assert eng.report()["cache"]["prefill_entries"] == 2
     assert sch.bucket_len(9) == 16
     # bucket is capped at the KV capacity
     assert sch.bucket_len(63) == 64
@@ -144,9 +144,9 @@ def test_unsupported_family_raises():
     cfg = get_reduced("falcon_mamba_7b")      # ssm: prefill not pad-invariant
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, ServeConfig(batch=2, max_len=32))
     with pytest.raises(NotImplementedError):
-        Scheduler(model, params, SchedulerConfig(slots=2, max_len=32),
-                  decode_fn=lambda c, t: None)
+        Scheduler(eng, SchedulerConfig(slots=2, max_len=32))
     # the ragged static path guards the same families
     eng = Engine(model, params, ServeConfig(batch=1, max_len=32))
     with pytest.raises(NotImplementedError):
@@ -258,6 +258,40 @@ def test_check_regression_gates_serving_throughput_both_directions():
     failures, _ = compare(base_mixed, {**mixed, "serving": dropped["serving"]},
                           serving_tolerance=0.5)
     assert len(failures) == 1 and "stitched_kernels" in failures[0]
+
+
+def test_check_regression_gates_prefix_liveness_positive():
+    """The prefix sub-run gates as liveness: hit rate / stitched-prefill
+    kernels must be > 0 in the candidate, whatever the baseline recorded;
+    a baseline predating the metrics skips them, a candidate that lost
+    them fails (lost coverage)."""
+    from benchmarks.check_regression import compare
+    wall = {"continuous": {"tokens_per_sec": 2000.0},
+            "static": {"tokens_per_sec": 1500.0}}
+    px = {"prefix_cache": {"hit_rate": 0.75},
+          "prefill": {"n_kernels": 22}}
+    base = {"workloads": {}, "serving": {**wall, "prefix": px}}
+
+    alive = {"workloads": {}, "serving": {**wall, "prefix": {
+        "prefix_cache": {"hit_rate": 0.1}, "prefill": {"n_kernels": 3}}}}
+    failures, _ = compare(base, alive)
+    assert failures == []
+
+    # hit rate 0 must fail even though 0 -> 0.75 is no "drop" vs baseline
+    dead = {"workloads": {}, "serving": {**wall, "prefix": {
+        "prefix_cache": {"hit_rate": 0.0}, "prefill": {"n_kernels": 22}}}}
+    failures, _ = compare(base, dead)
+    assert len(failures) == 1 and "must be > 0" in failures[0]
+    assert "prefix_cache_hit_rate" in failures[0]
+
+    # baseline predates the prefix metrics: skip, don't fail
+    old_base = {"workloads": {}, "serving": dict(wall)}
+    failures, _ = compare(old_base, alive)
+    assert failures == []
+
+    # candidate lost the metrics the baseline had: lost coverage
+    failures, _ = compare(base, {"workloads": {}, "serving": dict(wall)})
+    assert any("prefix" in f and "missing" in f for f in failures)
 
 
 def test_check_regression_gates_sharding_section():
