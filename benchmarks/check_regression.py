@@ -74,6 +74,17 @@ SERVING_METRICS = (
      "positive"),
 )
 
+# json paths inside the top-level "compute_stitching" section — kernel
+# counts after GEMM/custom-kernel admission into stitched partitions.
+# Deterministic (no wall clock): the block must stay collapsed and both
+# plans must actually carry Pallas groups.
+COMPUTE_METRICS = (
+    (("block_fn", "n_kernels"), "block_fn_kernels", "lower"),
+    (("block_fn", "pallas_groups"), "block_fn_pallas_groups", "positive"),
+    (("decode", "n_kernels"), "decode_kernels", "lower"),
+    (("decode", "pallas_groups"), "decode_pallas_groups", "positive"),
+)
+
 # The "measured" section is schema-checked, not value-gated: interpret-mode
 # wall clock is too noisy to gate, but losing the measured-timing record
 # entirely (the timer silently disabled, the section dropped from the
@@ -183,6 +194,8 @@ def compare(baseline: dict, candidate: dict, tolerance: float = TOLERANCE,
                   tolerance if serving_tolerance is None else serving_tolerance,
                   failures, lines)
     _gate_section(baseline, candidate, "sharding", SHARDING_METRICS,
+                  tolerance, failures, lines)
+    _gate_section(baseline, candidate, "compute_stitching", COMPUTE_METRICS,
                   tolerance, failures, lines)
     check_measured_schema(baseline, candidate, failures, lines)
     return failures, lines

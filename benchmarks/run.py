@@ -19,6 +19,9 @@ Sections:
            multi-device host platform: per-shard backward/packed kernel
            counts, trajectory agreement with the single-device stitched
            run, mesh-keyed cache entries
+  Compute  compute-intensive stitching: transformer block (q/k/v GEMMs +
+           Pallas flash attention + gelu MLP) -> ONE stitched kernel, plus
+           the serving decode step's plan kernel counts
   Perf     measured interpret-mode execution of stitched kernels vs oracle
            on the classic patterns (CPU wall time, correctness evidence)
 
@@ -576,6 +579,77 @@ def sharding(quick: bool) -> dict | None:
     }
 
 
+def compute_stitching(quick: bool) -> dict:
+    """Kernel-count evidence for compute-intensive stitching: a transformer
+    block (rms -> q/k/v GEMMs -> Pallas flash attention -> output GEMM ->
+    gelu MLP) compiling to ONE stitched kernel, and the serving decode
+    step's plan shrinking with it.  Counts are deterministic — the gate
+    holds them exactly (``lower`` direction + liveness), no wall clock."""
+    import jax
+    import jax.numpy as jnp
+    from repro.cache import CompilationService
+    from repro.configs import get_reduced
+    from repro.exec import stitch
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models import build_model
+    from repro.serve import Engine, ServeConfig
+
+    print("\n# Compute stitching — GEMMs + Pallas attention in one kernel")
+    print("name,us_per_call,derived")
+
+    B, S, D, H = 2, 128, 16, 2
+    dh, F = D // H, 64
+    rng = np.random.default_rng(3)
+
+    def mk(*shape):
+        return jnp.asarray(rng.standard_normal(shape) * 0.1, jnp.float32)
+
+    w = dict(wq=mk(D, D), wk=mk(D, D), wv=mk(D, D), wo=mk(D, D),
+             w1=mk(D, F), w2=mk(F, D), g1=mk(D), g2=mk(D))
+    x = mk(B, S, D)
+
+    def rms(v, gain):
+        return v * jax.lax.rsqrt(
+            jnp.mean(v * v, axis=-1, keepdims=True) + 1e-6) * gain
+
+    def attn_mlp_block(w, x):
+        h = rms(x, w["g1"])
+        q = (h @ w["wq"]).reshape(B, S, H, dh)
+        k = (h @ w["wk"]).reshape(B, S, H, dh)
+        v = (h @ w["wv"]).reshape(B, S, H, dh)
+        a = flash_attention(q, k, v, causal=True).reshape(B, S, D)
+        x2 = x + a @ w["wo"]
+        return x2 + jax.nn.gelu(rms(x2, w["g2"]) @ w["w1"]) @ w["w2"]
+
+    sf = stitch(attn_mlp_block, mode="offline", name="bench_attn_mlp_block")
+    sf(w, x)
+    plan = sf.report()["plan"] or {}
+    block = {"n_ops": plan.get("n_ops"), "n_kernels": plan.get("n_kernels"),
+             "pallas_groups": plan.get("pallas_groups")}
+    print(f"block_fn_kernels,,{block['n_ops']}->{block['n_kernels']} "
+          f"pallas={block['pallas_groups']}")
+
+    # the same admission rules through serving: decode-step plan counts
+    cfg = get_reduced("qwen3_1_7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    svc = CompilationService()
+    eng = Engine(model, params,
+                 ServeConfig(batch=2, max_len=32, stitch_execute=True),
+                 stitch_service=svc)
+    for p in (rng.integers(0, cfg.vocab, (n,)).astype(np.int32)
+              for n in (6, 11)):
+        eng.submit(p, max_new_tokens=4)
+    eng.drain()
+    pending = eng.land_plans(timeout=120.0)
+    dplan = eng.report()["decode"]["plan"] or {}
+    decode = {"n_ops": dplan.get("n_ops"), "n_kernels": dplan.get("n_kernels"),
+              "pallas_groups": dplan.get("pallas_groups")}
+    print(f"decode_step_kernels,,{decode['n_ops']}->{decode['n_kernels']} "
+          f"pallas={decode['pallas_groups']}, {pending} plan(s) pending")
+    return {"block_fn": block, "decode": decode}
+
+
 def perf_measured(quick: bool) -> dict:
     """Wall-clock interpret-mode stitched kernels vs unfused jnp on the
     canonical patterns — correctness + relative-ordering evidence — plus
@@ -682,6 +756,7 @@ def main() -> None:
     serve = serving(args.quick)
     train = training(args.quick)
     shard = sharding(args.quick)
+    compute = compute_stitching(args.quick)
     measured = perf_measured(args.quick)
 
     if args.json:
@@ -694,6 +769,7 @@ def main() -> None:
             "cache": cache,
             "serving": serve,
             "training": train,
+            "compute_stitching": compute,
             "measured": measured,
         }
         if shard is not None:

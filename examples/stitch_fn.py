@@ -1,11 +1,13 @@
 """Stitching your own function: the jit-like ``repro.exec.stitch()`` API.
 
-Three demos, none of which flow through the train or serve machinery:
+Four demos, none of which flow through the train or serve machinery:
 
 1. an arbitrary user pytree function (nested dicts/tuples, kwargs),
 2. a Mamba block and a Griffin RG-LRU block via ``Model.block_fn`` —
    workloads the fusion pipeline had never seen before the exec refactor,
-3. the same user function dispatched over a ``--model-parallel``-style
+3. compute stitching: a transformer block (q/k/v projections, Pallas flash
+   attention, output projection, gelu MLP) collapsing to ONE stitched kernel,
+4. the same user function dispatched over a ``--model-parallel``-style
    host mesh through ``shard_map``, with a mesh-keyed cache placement.
 
     PYTHONPATH=src python examples/stitch_fn.py
@@ -39,12 +41,12 @@ def show(name, sf):
           f"fallback_calls={rep['fallback_calls']}")
 
 
-def check(got, want, what):
+def check(got, want, what, tol=2e-4):
     for g, w in zip(jax.tree_util.tree_leaves(got),
                     jax.tree_util.tree_leaves(want)):
         np.testing.assert_allclose(np.asarray(g, np.float32),
                                    np.asarray(w, np.float32),
-                                   rtol=2e-4, atol=2e-4)
+                                   rtol=tol, atol=tol)
     print(f"  {what}: matches the jit reference")
 
 
@@ -90,12 +92,52 @@ def demo_model_blocks(svc):
         out = sf(lp, x)
         svc.wait(120.0)
         out = sf(lp, x)
-        check(out, jax.jit(model.block_fn)(lp, x), f"{arch} block")
+        # bf16 recurrent blocks: XLA rewrites the scan body under jit (loop
+        # fusion changes bf16 roundings, compounding over time steps), so
+        # even *eager* jax diverges from jit by a few bf16 ulps here
+        tol = 5e-2 if model.cfg.dtype == "bfloat16" else 2e-4
+        check(out, jax.jit(model.block_fn)(lp, x), f"{arch} block", tol=tol)
         show(f"{arch}_block", sf)
 
 
+def demo_compute_stitching(svc):
+    print("\n-- 3. compute stitching: transformer block -> ONE kernel ------")
+    from repro.kernels.flash_attention import flash_attention
+
+    B, S, D, H = 2, 128, 16, 2
+    dh, F = D // H, 64
+    rng = np.random.default_rng(3)
+
+    def mk(*shape):
+        return jnp.asarray(rng.standard_normal(shape) * 0.1, jnp.float32)
+
+    w = dict(wq=mk(D, D), wk=mk(D, D), wv=mk(D, D), wo=mk(D, D),
+             w1=mk(D, F), w2=mk(F, D), g1=mk(D), g2=mk(D))
+    x = mk(B, S, D)
+
+    def rms(v, gain):
+        return v * jax.lax.rsqrt(
+            jnp.mean(v * v, axis=-1, keepdims=True) + 1e-6) * gain
+
+    def attn_mlp_block(w, x):
+        h = rms(x, w["g1"])
+        q = (h @ w["wq"]).reshape(B, S, H, dh)
+        k = (h @ w["wk"]).reshape(B, S, H, dh)
+        v = (h @ w["wv"]).reshape(B, S, H, dh)
+        a = flash_attention(q, k, v, causal=True).reshape(B, S, D)
+        x2 = x + a @ w["wo"]
+        return x2 + jax.nn.gelu(rms(x2, w["g2"]) @ w["w1"]) @ w["w2"]
+
+    sf = stitch(attn_mlp_block, service=svc, name="attn_mlp_block")
+    out = sf(w, x)
+    svc.wait(120.0)
+    out = sf(w, x)                  # q/k/v GEMMs + flash attention + MLP: one
+    check(out, jax.jit(attn_mlp_block)(w, x), "attention+MLP block")
+    show("attn_mlp_block", sf)
+
+
 def demo_sharded(svc):
-    print("\n-- 3. shard_map dispatch over the host mesh ------------------")
+    print("\n-- 4. shard_map dispatch over the host mesh ------------------")
     from repro.launch.mesh import make_host_mesh
 
     mesh = make_host_mesh(2 if jax.device_count() % 2 == 0 else 1)
@@ -128,6 +170,7 @@ def main():
     svc = CompilationService()
     demo_user_function(svc)
     demo_model_blocks(svc)
+    demo_compute_stitching(svc)
     demo_sharded(svc)
     print("\ncache:", {k: v for k, v in svc.cache.report().items()
                        if k in ("hits", "misses", "memory_entries")})

@@ -36,7 +36,7 @@ from repro.core.pattern import FusionPattern
 from repro.core.tuner import grid_row_block
 
 from .policy import BucketPolicy, BucketStats, EvictionPolicy
-from .signature import GraphSignature, compute_signature
+from .signature import GraphSignature, compute_signature, config_key
 from .store import DiskStore, GroupRecord, MemoryStore, PlanRecord, TwoTierStore
 
 __all__ = ["StitchCache", "CompilationService", "extract_record", "replay_record"]
@@ -50,6 +50,7 @@ def extract_record(
     hw: str,
     solve_seconds: float = 0.0,
     placement: str = "",
+    config: str = "",
 ) -> PlanRecord:
     """Freeze a compiled plan into canonical coordinates."""
     idx = sig.node_to_index
@@ -81,6 +82,7 @@ def extract_record(
         ilp_iterations=ilp.iterations if ilp else 0,
         solve_seconds=solve_seconds,
         placement=placement,
+        config=config,
     )
 
 
@@ -175,14 +177,16 @@ class StitchCache:
 
     # -- keys -----------------------------------------------------------------
     def key_for(self, sig: GraphSignature, mode: str = "stitch",
-                hw: str = "", placement: str = "") -> tuple:
+                hw: str = "", placement: str = "", config: str = "") -> tuple:
         # hw is part of the durable key: a plan tuned for one chip's launch
         # latency / on-chip budget must not shadow the other chip's optimum.
         # placement (mesh + PartitionSpecs, see signature.placement_key) is
         # too: a plan solved at one mesh's shard-local shapes never replays
-        # at another mesh or at the single-device ("") placement.
+        # at another mesh or at the single-device ("") placement.  config is
+        # the GenConfig digest (signature.config_key): different
+        # pattern-generation knobs legitimately produce different plans.
         return (sig.graph_key, sig.bucket_key(self.bucket_policy), mode, hw,
-                placement)
+                placement, config)
 
     def signature_of(self, g: Graph) -> GraphSignature:
         return compute_signature(g)
@@ -196,8 +200,9 @@ class StitchCache:
         count: bool = True,
     ) -> CompiledGraph | None:
         placement = getattr(compiler, "placement", "")
+        cfg_key = config_key(getattr(compiler, "gen_cfg", None))
         live_key = (id(g), compiler.mode, compiler.hw.name,
-                    compiler.use_pallas, placement)
+                    compiler.use_pallas, placement, cfg_key)
         with self._lock:
             live = self._live.get(live_key)
         if live is not None and live[0] is g and live[3] == len(g.nodes):
@@ -208,7 +213,8 @@ class StitchCache:
             art.stats = dataclasses.replace(live[1].stats, cache_status="hit")
             return art
         sig = sig or compute_signature(g)
-        key = self.key_for(sig, compiler.mode, compiler.hw.name, placement)
+        key = self.key_for(sig, compiler.mode, compiler.hw.name, placement,
+                           cfg_key)
         with self._lock:
             rec = self.store.get(key)
         compiled = None
@@ -232,7 +238,8 @@ class StitchCache:
                 self._live.clear()
             self._live[(id(g), compiler.mode, compiler.hw.name,
                         compiler.use_pallas,
-                        getattr(compiler, "placement", ""))] = (
+                        getattr(compiler, "placement", ""),
+                        config_key(getattr(compiler, "gen_cfg", None)))] = (
                 g, compiled, bucket, len(g.nodes))
 
     def insert(
@@ -247,8 +254,10 @@ class StitchCache:
         bucket = sig.bucket_key(self.bucket_policy)
         hw = compiler.hw.name if compiler is not None else ""
         placement = getattr(compiler, "placement", "") if compiler else ""
+        cfg_key = (config_key(getattr(compiler, "gen_cfg", None))
+                   if compiler is not None else config_key())
         rec = extract_record(g, sig, compiled, bucket, hw, solve_seconds,
-                             placement=placement)
+                             placement=placement, config=cfg_key)
         with self._lock:
             self.store.put(rec)
         if compiler is not None:
@@ -311,7 +320,8 @@ class CompilationService:
         """The recorded background-compile failure for this graph's stitch
         key, or None.  Engines poll it so a doomed compile is surfaced
         (warn-once + report) instead of silently serving the fallback."""
-        key = self.cache.key_for(sig, "stitch", self.hw.name, placement)
+        key = self.cache.key_for(sig, "stitch", self.hw.name, placement,
+                                 config_key(self.gen_cfg))
         with self._lock:
             return self.errors.get(key)
 
@@ -363,7 +373,8 @@ class CompilationService:
         — the failure is recorded in ``errors`` and callers surface it via
         :meth:`error_for`."""
         sig = sig or compute_signature(g)
-        key = self.cache.key_for(sig, "stitch", self.hw.name, placement)
+        key = self.cache.key_for(sig, "stitch", self.hw.name, placement,
+                                 config_key(self.gen_cfg))
         with self._lock:
             self._threads = [x for x in self._threads if x.is_alive()]
             if key in self._pending:

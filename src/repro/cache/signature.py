@@ -53,6 +53,7 @@ from repro.core.ir import Graph
 __all__ = [
     "GraphSignature",
     "compute_signature",
+    "config_key",
     "node_struct_hashes",
     "placement_key",
     "token_prefix_keys",
@@ -185,6 +186,25 @@ def token_prefix_keys(tokens, page_size: int) -> list[str]:
         h.update(toks[start:start + page_size].tobytes())
         keys.append(h.hexdigest()[:16])
     return keys
+
+
+def config_key(gen_cfg=None) -> str:
+    """Stable digest of the pattern-generation knobs a plan was solved under.
+
+    Two compiles of the same graph under different :class:`GenConfig`
+    settings (``large_gemm_flops``, ``stitch_custom``, scratch budget, ...)
+    legitimately choose different plans; without this component a plan cached
+    under one config replays for all of them — the plan-cache staleness bug.
+    ``None`` hashes identically to a default ``GenConfig()``, so callers that
+    never touch the knobs keep hitting the same entries.
+    """
+    import dataclasses
+
+    from repro.core.fusiongen import GenConfig
+
+    cfg = gen_cfg if gen_cfg is not None else GenConfig()
+    fields = sorted(dataclasses.asdict(cfg).items())
+    return _digest(repr(fields))[:12]
 
 
 def placement_key(mesh=None, specs=None) -> str:

@@ -11,7 +11,7 @@ and solving — is what the record lets us skip).
 
 Disk layout (reusing the crash-safety idiom of :mod:`repro.ckpt.store`)::
 
-    <dir>/plan_<graph12>_<bucket12>_<mode>_<hw>.json    # one entry per key
+    <dir>/plan_<graph12>_<bucket12>_<mode>_<hw>[_<placement>][_<config12>].json
     written as .tmp then os.replace()d — a torn write is never visible.
 """
 
@@ -26,8 +26,10 @@ from pathlib import Path
 __all__ = ["GroupRecord", "PlanRecord", "MemoryStore", "DiskStore", "TwoTierStore"]
 
 # v2 added the mesh/PartitionSpec placement component to the key (sharded
-# stitching); v1 records predate it and are treated as misses on read.
-RECORD_VERSION = 2
+# stitching); v3 added the GenConfig digest (a plan solved under one set of
+# pattern-generation knobs must not replay under another).  Older records
+# are treated as misses on read.
+RECORD_VERSION = 3
 
 
 @dataclass(frozen=True)
@@ -70,11 +72,12 @@ class PlanRecord:
     ilp_iterations: int = 0
     solve_seconds: float = 0.0          # cold compile wall time
     placement: str = ""                 # mesh+PartitionSpec key ("" = 1-device)
+    config: str = ""                    # GenConfig digest (signature.config_key)
 
     @property
-    def key(self) -> tuple[str, str, str, str, str]:
+    def key(self) -> tuple[str, str, str, str, str, str]:
         return (self.graph_key, self.bucket_key, self.mode, self.hw,
-                self.placement)
+                self.placement, self.config)
 
     def to_json(self) -> dict:
         return {
@@ -85,6 +88,7 @@ class PlanRecord:
             "mode": self.mode,
             "hw": self.hw,
             "placement": self.placement,
+            "config": self.config,
             "n_nodes": self.n_nodes,
             "groups": [g.to_json() for g in self.groups],
             "objective": self.objective,
@@ -108,6 +112,7 @@ class PlanRecord:
             ilp_iterations=d.get("ilp_iterations", 0),
             solve_seconds=d.get("solve_seconds", 0.0),
             placement=d.get("placement", ""),
+            config=d.get("config", ""),
         )
 
 
@@ -144,15 +149,16 @@ class DiskStore:
         self.max_entries = max_entries
 
     def _path(self, key: tuple) -> Path:
-        graph_key, bucket_key, mode, hw, placement = key
+        graph_key, bucket_key, mode, hw, placement, config = key
         hw_slug = "".join(c if c.isalnum() else "-" for c in hw)
         # placement slug keeps the mesh shape human-greppable; the full
         # string is re-checked against the record body (rec.key != key below)
         pl_slug = "".join(c for c in placement if c.isalnum())[:24]
         pl_part = f"_{pl_slug}" if pl_slug else ""
+        cfg_part = f"_{config[:12]}" if config else ""
         return (self.directory
                 / f"plan_{graph_key[:12]}_{bucket_key[:12]}_{mode}_{hw_slug}"
-                  f"{pl_part}.json")
+                  f"{pl_part}{cfg_part}.json")
 
     def get(self, key: tuple) -> PlanRecord | None:
         path = self._path(key)

@@ -26,8 +26,8 @@ from .ir import Graph, OpKind, OpNode
 from .pattern import FusionPattern
 from .templates import Template
 
-__all__ = ["EW_OPS", "canonical_dtype", "eval_node", "build_reference_fn",
-           "build_per_op_fns", "emit_source"]
+__all__ = ["EW_OPS", "canonical_dtype", "accumulation_dtype", "dot_accumulate",
+           "eval_node", "build_reference_fn", "build_per_op_fns", "emit_source"]
 
 
 def canonical_dtype(dtype) -> jnp.dtype:
@@ -89,6 +89,34 @@ _REDUCERS = {
 }
 
 
+def accumulation_dtype(node: OpNode) -> jnp.dtype:
+    """Accumulation dtype for a GEMM/BATCHED_GEMM node.
+
+    The traced ``preferred`` attr (the jaxpr's ``preferred_element_type``)
+    wins; otherwise float dots accumulate in at least f32.  Replaying with
+    ``preferred_element_type=<output dtype>`` is NOT equivalent for bf16/f16
+    outputs: it forces genuinely low-precision accumulation where XLA's
+    default dot accumulates in f32 and rounds once — the source of the
+    stitched-executor logit wobble vs plain jit."""
+    pref = node.attrs.get("preferred")
+    if pref is not None:
+        return canonical_dtype(pref)
+    out_dt = canonical_dtype(node.dtype)
+    if jnp.issubdtype(out_dt, jnp.floating):
+        return jnp.promote_types(out_dt, jnp.float32)
+    return out_dt
+
+
+def dot_accumulate(node: OpNode, lhs, rhs, *, dimension_numbers):
+    """`lax.dot_general` with explicit accumulation dtype, rounded once to
+    the node's declared output dtype.  Every executor (fused-jnp groups,
+    the xla fallback artifact, and in-kernel stitched dots) funnels through
+    here so they are bitwise-consistent with each other and with jit."""
+    out = lax.dot_general(lhs, rhs, dimension_numbers=dimension_numbers,
+                          preferred_element_type=accumulation_dtype(node))
+    return out.astype(canonical_dtype(node.dtype))
+
+
 def eval_node(node: OpNode, operands: list, g: Graph | None = None):
     """Evaluate one StitchIR node on concrete/traced jnp values."""
     k = node.kind
@@ -96,6 +124,8 @@ def eval_node(node: OpNode, operands: list, g: Graph | None = None):
         op = node.attrs["op"]
         if op == "convert":
             return operands[0].astype(canonical_dtype(node.dtype))
+        if op == "integer_pow":
+            return lax.integer_pow(operands[0], node.attrs["y"])
         fn = EW_OPS.get(op)
         if fn is None:
             raise NotImplementedError(f"elementwise op {op!r}")
@@ -129,10 +159,8 @@ def eval_node(node: OpNode, operands: list, g: Graph | None = None):
     if k in (OpKind.GEMM, OpKind.BATCHED_GEMM):
         contract = tuple(tuple(d) for d in node.attrs["contract"])
         batch = tuple(tuple(d) for d in node.attrs.get("batch", ((), ())))
-        return lax.dot_general(
-            operands[0], operands[1], dimension_numbers=(contract, batch),
-            preferred_element_type=jnp.dtype(node.dtype),
-        )
+        return dot_accumulate(node, operands[0], operands[1],
+                              dimension_numbers=(contract, batch))
     if k is OpKind.GATHER:
         table, idx = operands
         return jnp.take(table, idx.astype(jnp.int32), axis=0)

@@ -244,11 +244,17 @@ class StitchCompiler:
         with obs.span("compile.pattern_gen", cat="compile", graph=g.name) as s:
             patterns = generate_patterns(g, self.gen_cfg)
             s.set(patterns=len(patterns))
-        scores = [self.cost.score(p).score for p in patterns]
+        pscores = [self.cost.score(p) for p in patterns]
+        scratch_budget = self.gen_cfg.scratch_budget
+        if scratch_budget is None:
+            scratch_budget = self.hw.onchip_budget
         with obs.span("compile.ilp", cat="compile", graph=g.name,
                       patterns=len(patterns)) as s:
-            result = solve_fusion_plan(g, patterns, scores,
-                                       budget_seconds=self.plan_budget)
+            result = solve_fusion_plan(
+                g, patterns, [ps.score for ps in pscores],
+                budget_seconds=self.plan_budget,
+                scratch_requests=[ps.scratch_request for ps in pscores],
+                scratch_budget=scratch_budget)
             s.set(method=result.method, chosen=len(result.chosen))
         return result.chosen, result
 

@@ -111,6 +111,34 @@ class CostModel:
         k = math.prod(lhs.shape[d] for d in node.attrs["contract"][0])
         return 2.0 * node.size * k
 
+    def op_flops(self, g: Graph, name: str) -> float:
+        """MXU/compute FLOPs of one op: GEMMs by contraction size, registered
+        custom kernels by their declared estimate, everything else 0."""
+        node = g[name]
+        if node.kind in (OpKind.GEMM, OpKind.BATCHED_GEMM):
+            return self.gemm_flops(g, name)
+        if node.kind is OpKind.CUSTOM and "project" not in node.attrs:
+            from repro.kernels.registry import lookup
+            desc = lookup(node)
+            if desc is not None:
+                return desc.flops(node, g)
+        return 0.0
+
+    def custom_scratch(self, p: FusionPattern) -> int:
+        """On-chip bytes the pattern's registered custom-kernel bodies bring
+        along (e.g. flash attention's m/l/acc accumulators).  Kept separate
+        from :meth:`scratch_request` because that dict feeds the *template*
+        scratch plan; a custom kernel allocates its own scratch inside its
+        saved body."""
+        from repro.kernels.registry import lookup
+        total = 0
+        for n in p.compute_members:
+            if n.kind is OpKind.CUSTOM and "project" not in n.attrs:
+                desc = lookup(n)
+                if desc is not None:
+                    total += desc.scratch_bytes(n, p.graph)
+        return total
+
     def kernel_time(self, g: Graph, name: str) -> float:
         """K(Op): standalone kernel execution time for one op (roofline max
         of its memory and compute terms) — the unfused baseline cost."""
@@ -119,8 +147,8 @@ class CostModel:
             return 0.0
         mem = self.hw.mem_time(self.op_bytes(g, name))
         comp = 0.0
-        if node.kind in (OpKind.GEMM, OpKind.BATCHED_GEMM):
-            comp = self.hw.flops_time(self.gemm_flops(g, name))
+        if node.kind in (OpKind.GEMM, OpKind.BATCHED_GEMM, OpKind.CUSTOM):
+            comp = self.hw.flops_time(self.op_flops(g, name))
         elif node.kind is OpKind.REDUCTION:
             comp = self.hw.flops_time(float(g[node.operands[0]].size))
         elif node.kind is OpKind.ELEMENTWISE:
@@ -135,8 +163,8 @@ class CostModel:
         mem = self.hw.mem_time(io_bytes)
         comp = 0.0
         for n in p.compute_members:
-            if n.kind in (OpKind.GEMM, OpKind.BATCHED_GEMM):
-                comp += self.hw.flops_time(self.gemm_flops(g, n.name))
+            if n.kind in (OpKind.GEMM, OpKind.BATCHED_GEMM, OpKind.CUSTOM):
+                comp += self.hw.flops_time(self.op_flops(g, n.name))
             else:
                 comp += self.hw.flops_time(float(n.size))
         return max(mem, comp)
@@ -180,7 +208,7 @@ class CostModel:
         if n_kernels < 2:
             return PatternScore(p, -1.0, False, "singleton", 0, 0, 0)
         req = self.scratch_request(p)
-        total_req = sum(req.values())
+        total_req = sum(req.values()) + self.custom_scratch(p)
         if total_req > self.hw.onchip_budget:
             return PatternScore(
                 p, -1.0, False,
@@ -196,7 +224,7 @@ class CostModel:
         if n_kernels < 2:
             return PatternScore(p, -1.0, False, "singleton", 0, 0, 0)
         req = self.scratch_request(p)
-        total_req = sum(req.values())
+        total_req = sum(req.values()) + self.custom_scratch(p)
         if total_req > self.hw.onchip_budget:
             return PatternScore(p, -1.0, False, "scratch over budget", total_req, 0, 0)
         unfused = sum(self.kernel_time(p.graph, n.name) for n in p.compute_members)
@@ -209,7 +237,9 @@ class CostModel:
 
     # -- dispatch rule (§4.3: model-based for most, execution for complex) ---
     def score(self, p: FusionPattern) -> PatternScore:
-        complex_pattern = p.pattern_class == "gemm" or len(p.reduce_kinds) > 1
+        complex_pattern = (p.pattern_class == "gemm"
+                           or len(p.reduce_kinds) > 1
+                           or bool(p.custom_members))
         if complex_pattern:
             return self.score_execution_based(p)
         return self.score_model_based(p)

@@ -52,6 +52,13 @@ class GenConfig:
     max_patterns: int = 4000
     max_pattern_size: int = 64
     max_depth: int = 12
+    # registered Pallas custom kernels (kernels/registry.py) stop partitioning
+    # from `custom_fuse_step` on, so attention/router bodies can live inside a
+    # stitched kernel alongside their surrounding projections
+    stitch_custom: bool = True
+    custom_fuse_step: int = 1
+    # on-chip scratch ceiling for candidate partitions; None = hardware budget
+    scratch_budget: int | None = None
 
 
 def _gemm_flops(g: Graph, node: OpNode) -> float:
@@ -66,8 +73,16 @@ def _is_partition_op(g: Graph, node: OpNode, step: int, cfg: GenConfig) -> bool:
     """Paper's multi-step widening: step 0 partitions on large GEMMs only;
     each later step *removes* a class from the partition set (i.e. allows it
     to fuse).  Order: large gemm | batched-gemm | column reductions | scalar
-    reductions.  CUSTOM/GATHER/SCATTER ops always partition (opaque)."""
-    if node.kind in (OpKind.CUSTOM, OpKind.GATHER, OpKind.SCATTER):
+    reductions.  GATHER/SCATTER always partition (opaque); CUSTOM partitions
+    unless the kernel is registered stitchable and the step has widened past
+    ``cfg.custom_fuse_step``."""
+    if node.kind is OpKind.CUSTOM:
+        if cfg.stitch_custom and step >= cfg.custom_fuse_step:
+            from repro.kernels.registry import lookup
+            if lookup(node) is not None:
+                return False
+        return True
+    if node.kind in (OpKind.GATHER, OpKind.SCATTER):
         return True
     if node.kind is OpKind.SLICE:
         return False
@@ -128,9 +143,20 @@ def multi_step_substitution(g: Graph, cfg: GenConfig) -> list[FusionPattern]:
     return out
 
 
-def _explore_fusible(g: Graph, name: str) -> bool:
+def _explore_fusible(g: Graph, name: str, cfg: GenConfig | None = None) -> bool:
     node = g[name]
-    return node.kind in _FUSIBLE_EXPLORE
+    if node.kind in _FUSIBLE_EXPLORE:
+        return True
+    if cfg is None:
+        return False
+    # exploration may also pull in small GEMMs and registered custom kernels —
+    # the same classes the widened substitution steps stop partitioning on
+    if node.kind is OpKind.GEMM:
+        return _gemm_flops(g, node) < cfg.large_gemm_flops
+    if node.kind is OpKind.CUSTOM and cfg.stitch_custom:
+        from repro.kernels.registry import lookup
+        return lookup(node) is not None
+    return False
 
 
 def exploratory_fusion(
@@ -158,11 +184,11 @@ def exploratory_fusion(
         for m in members:
             # ProducerExpansion
             for o in g[m].operands:
-                if o not in members and _explore_fusible(g, o):
+                if o not in members and _explore_fusible(g, o, cfg):
                     cands.add(o)
             # ConsumerExpansion
             for u in g.users(m):
-                if u not in members and _explore_fusible(g, u):
+                if u not in members and _explore_fusible(g, u, cfg):
                     cands.add(u)
         return sorted(cands)
 

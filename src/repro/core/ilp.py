@@ -208,6 +208,8 @@ def solve_fusion_plan(
     scores: list[float],
     max_cycle_rounds: int = 50,
     budget_seconds: float | None = None,
+    scratch_requests: list[int] | None = None,
+    scratch_budget: int | None = None,
 ) -> PlanResult:
     """The paper's full loop: ILP -> cycle check -> add cut -> re-solve.
 
@@ -217,10 +219,20 @@ def solve_fusion_plan(
     the returned :class:`PlanResult` (``method="greedy"``,
     ``budget_expired=True``) so callers and cache records can tell an
     optimal plan from a budgeted one.
+
+    ``scratch_requests``/``scratch_budget`` add the on-chip feasibility
+    constraint: any pattern whose requested scratch exceeds the budget is
+    excluded from the solve outright (infeasible, not merely unattractive).
     """
     assert len(patterns) == len(scores)
     deadline = (None if budget_seconds is None
                 else time.monotonic() + budget_seconds)
+    if scratch_requests is not None and scratch_budget is not None:
+        assert len(scratch_requests) == len(patterns)
+        scores = [
+            -1.0 if scratch_requests[i] > scratch_budget else s
+            for i, s in enumerate(scores)
+        ]
     keep = [i for i, s in enumerate(scores) if s > 0]
     pats = [patterns[i] for i in keep]
     w = [scores[i] for i in keep]

@@ -188,12 +188,12 @@ def trace_to_graph(fn: Callable, *example_args, name: str = "traced",
                 g.add(OpNode(nm, OpKind.ELEMENTWISE, shape, dtype, operands,
                              {"op": "square"}))
             else:
-                nm = fresh("pow")
-                lit = fresh("lit")
-                g.add(OpNode(lit, OpKind.CONSTANT, (), dtype,
-                             (), {"value": np.asarray(float(p), dtype)}))
-                g.add(OpNode(nm, OpKind.ELEMENTWISE, shape, dtype,
-                             operands + (lit,), {"op": "pow"}))
+                # replay integer_pow exactly: lowering to pow(x, float(p))
+                # computes exp(p*log x) — a different rounding (and NaN for
+                # negative bases) than XLA's repeated-multiply
+                nm = fresh("ipow")
+                g.add(OpNode(nm, OpKind.ELEMENTWISE, shape, dtype, operands,
+                             {"op": "integer_pow", "y": int(p)}))
         elif prim == "select_n":
             nm = fresh("select")
             # lax.select_n(pred, on_false, on_true) -> where(pred, on_true, on_false)
@@ -234,9 +234,15 @@ def trace_to_graph(fn: Callable, *example_args, name: str = "traced",
             (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
             kind = OpKind.BATCHED_GEMM if lb else OpKind.GEMM
             nm = fresh("dot")
+            # the jaxpr's accumulation request must survive into the IR:
+            # dropping it made the executors re-derive accumulation dtype
+            # from the (possibly bf16) output dtype — see eval_node
+            pref = eqn.params.get("preferred_element_type")
             g.add(OpNode(nm, kind, shape, dtype, operands,
                          {"contract": (tuple(lc), tuple(rc)),
-                          "batch": (tuple(lb), tuple(rb))}))
+                          "batch": (tuple(lb), tuple(rb)),
+                          "preferred": None if pref is None
+                          else str(np.dtype(pref))}))
         elif prim in _SCATTER_PRIMS and len(eqn.outvars) == 1:
             params = dict(eqn.params)
 
@@ -271,23 +277,34 @@ def trace_to_graph(fn: Callable, *example_args, name: str = "traced",
             return res
 
         psig = _stable_params_sig(params)
+        extra = {}
+        if prim.name == "pallas_call":
+            # the kernel-body function name identifies WHICH Pallas kernel
+            # this is; the stitchable-kernel registry keys on it, and making
+            # it an attr (not just params_sig type-name soup) also makes
+            # kernel identity visible to cache signatures
+            nsi = params.get("name_and_src_info")
+            tag = getattr(nsi, "name", None) or params.get("name")
+            if tag:
+                extra["kernel"] = str(tag)
         if len(eqn.outvars) == 1:
             out = eqn.outvars[0]
             nm = fresh(f"custom_{prim.name}")
             g.add(OpNode(nm, OpKind.CUSTOM, tuple(out.aval.shape),
                          _dtype_str(out.aval), operands,
-                         {"prim": prim.name, "params_sig": psig, "eval_fn": run}))
+                         {"prim": prim.name, "params_sig": psig,
+                          "eval_fn": run, **extra}))
             env[out] = nm
         else:
             base = fresh(f"custom_{prim.name}")
             g.add(OpNode(base, OpKind.CUSTOM, (), "float32", operands,
                          {"prim": prim.name, "params_sig": psig,
-                          "eval_fn": run, "multi": True}))
+                          "eval_fn": run, "multi": True, **extra}))
             for i, out in enumerate(eqn.outvars):
                 nm = f"{base}.o{i}"
                 g.add(OpNode(nm, OpKind.CUSTOM, tuple(out.aval.shape),
                              _dtype_str(out.aval), (base,),
-                             {"prim": prim.name, "project": i}))
+                             {"prim": prim.name, "project": i, **extra}))
                 env[out] = nm
 
     for eqn in closed.jaxpr.eqns:
@@ -297,5 +314,50 @@ def trace_to_graph(fn: Callable, *example_args, name: str = "traced",
     for v in closed.jaxpr.outvars:
         outputs.append(read(v))
     g.mark_output(*outputs)
+    _fold_widening_converts(g)
     g.validate()
     return g, input_names
+
+
+def _is_float(dtype: str) -> bool:
+    return jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
+
+
+def _fold_widening_converts(g: Graph) -> None:
+    """Mirror XLA's ``convert_f32(dot_bf16) -> dot_f32`` simplification.
+
+    Under jit, a dot whose value is consumed only by converts to a *wider*
+    float type never materializes the narrow intermediate — XLA computes the
+    dot at the wide type directly.  The op-by-op executors replay the graph
+    literally, rounding to the narrow dtype between the dot and the convert:
+    one bf16 ulp of divergence on every logit (the stitched-executor "logit
+    wobble").  Widening the dot's declared dtype here (the converts become
+    value-preserving no-ops) keeps every executor bitwise-consistent with
+    jit.  Dots that are graph outputs keep their spelled dtype.  XLA applies
+    the rewrite even when the jaxpr pins ``preferred_element_type`` to the
+    narrow dtype (jnp.matmul does), so a narrow ``preferred`` is widened
+    along with the output; an already-wide ``preferred`` needs no fold."""
+    for node in g.nodes.values():
+        if node.kind not in (OpKind.GEMM, OpKind.BATCHED_GEMM):
+            continue
+        if node.name in g.outputs or not _is_float(node.dtype):
+            continue
+        pref = node.attrs.get("preferred")
+        if pref is not None and np.dtype(pref).itemsize > np.dtype(node.dtype).itemsize:
+            continue
+        users = g.users(node.name)
+        if not users:
+            continue
+        widths = []
+        for u in users:
+            un = g[u]
+            if (un.kind is not OpKind.ELEMENTWISE
+                    or un.attrs.get("op") != "convert"
+                    or not _is_float(un.dtype)
+                    or np.dtype(un.dtype).itemsize <= np.dtype(node.dtype).itemsize):
+                break
+            widths.append(un.dtype)
+        else:
+            wide = max(widths, key=lambda d: np.dtype(d).itemsize)
+            node.dtype = wide
+            node.attrs["preferred"] = wide

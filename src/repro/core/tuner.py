@@ -139,7 +139,9 @@ class TemplateTuner:
         req_all = self.cost.scratch_request(p)
         req = {k: v for k, v in req_all.items() if k in set(template.scratch_ops)}
         plan = self._allocator(p.graph).allocate(req)
-        if plan.allocated > self.hw.onchip_budget:    # volume constraint
+        # registered custom-kernel bodies allocate their own scratch inside
+        # the composed kernel; it shares the same on-chip volume
+        if plan.allocated + self.cost.custom_scratch(p) > self.hw.onchip_budget:
             return None
         return plan
 

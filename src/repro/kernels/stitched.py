@@ -260,6 +260,25 @@ def _analyze_with_rows(p: FusionPattern, rows: int,
                 raise StitchInfeasible(f"gather {name} from row-varying table")
         elif k is OpKind.TUPLE:
             roles[name] = INV
+        elif k is OpKind.CUSTOM:
+            if "project" in node.attrs:
+                # projection of a multi-output custom base: its own shape
+                # decides the role; the base is a shapeless tuple carrier
+                roles[name] = (ROW if node.shape and node.shape[0] == rows
+                               else INV)
+                continue
+            from .registry import lookup
+            if lookup(node) is None:
+                raise StitchInfeasible(f"unregistered custom kernel {name}")
+            if node.attrs.get("multi") and name in p.external_outputs:
+                raise StitchInfeasible(
+                    f"multi-output custom base {name} escapes the pattern")
+            # the saved eval_fn replays the pallas_call at its full traced
+            # shapes; one grid step over the whole row space makes every
+            # blocked shape equal its full shape, so the replay composes
+            single_block = True
+            roles[name] = (ROW if node.shape and node.shape[0] == rows
+                           else INV)
         else:
             raise StitchInfeasible(f"unsupported kind {k} in stitched kernel")
 

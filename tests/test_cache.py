@@ -150,6 +150,25 @@ def test_plans_keyed_by_hardware():
     assert other.stats.cache_status == "miss"   # V100 plan must not shadow it
 
 
+def test_plans_keyed_by_gen_config():
+    """A plan solved under one GenConfig must not replay under another —
+    the knobs (large_gemm_flops, stitch_custom, ...) change which patterns
+    exist, so a stale hit would silently execute the wrong plan."""
+    from repro.core.fusiongen import GenConfig
+    cache = StitchCache()
+    g, _ = _softmax_graph()
+    StitchCompiler(mode="stitch", cache=cache).compile(g)
+    g2, _ = _softmax_graph("renamed")
+    other = StitchCompiler(
+        mode="stitch", cache=cache,
+        gen_cfg=GenConfig(large_gemm_flops=1.0)).compile(g2)
+    assert other.stats.cache_status == "miss"
+    # the default config still hits (None hashes like GenConfig())
+    g3, _ = _softmax_graph("renamed_again")
+    same = StitchCompiler(mode="stitch", cache=cache).compile(g3)
+    assert same.stats.cache_status == "hit"
+
+
 def test_graph_mutation_invalidates_live_memo():
     from repro.core import OpKind, OpNode
     cache = StitchCache()
@@ -193,9 +212,10 @@ def test_memory_lru_eviction():
     for i in range(3):
         ms.put(_dummy_record(i))
     assert len(ms) == 2 and ms.evictions == 1
-    # keys carry the placement component ("" = single-device) since v2
-    assert ms.get(("g0", "b", "stitch", "TPU_V5E", "")) is None   # evicted
-    assert ms.get(("g2", "b", "stitch", "TPU_V5E", "")) is not None
+    # keys carry the placement component ("" = single-device) since v2 and
+    # the GenConfig digest ("" for records frozen without a compiler) since v3
+    assert ms.get(("g0", "b", "stitch", "TPU_V5E", "", "")) is None   # evicted
+    assert ms.get(("g2", "b", "stitch", "TPU_V5E", "", "")) is not None
 
 
 def test_disk_roundtrip_replay_matches_fresh_compile(tmp_path, rng):

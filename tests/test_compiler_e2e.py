@@ -105,3 +105,71 @@ def test_stats_pattern_classes():
     cg = StitchCompiler(mode="stitch").compile(g)
     assert sum(cg.stats.pattern_classes.values()) >= 1
     assert cg.stats.modeled_time > 0
+
+
+def test_attention_mlp_block_single_kernel(rng):
+    """A full transformer block — rmsnorm, q/k/v projections, Pallas flash
+    attention, output projection, MLP, residuals — compiles to ONE stitched
+    kernel: the registered custom kernel fuses with the small GEMMs around
+    it instead of partitioning the graph into islands."""
+    from repro.kernels.flash_attention import flash_attention
+
+    B, S, D, H = 2, 128, 16, 2
+    dh, F = D // H, 4 * 16
+
+    def mk(*shape):
+        return jnp.asarray(rng.standard_normal(shape, np.float32) * 0.1)
+
+    wq, wk, wv, wo = mk(D, D), mk(D, D), mk(D, D), mk(D, D)
+    w1, w2, g1, g2 = mk(D, F), mk(F, D), mk(D), mk(D)
+    x = mk(B, S, D)
+
+    def rms(v, gain):
+        var = jnp.mean(v * v, axis=-1, keepdims=True)
+        return v * jax.lax.rsqrt(var + 1e-6) * gain
+
+    def block(wq, wk, wv, wo, w1, w2, g1, g2, x):
+        h = rms(x, g1)
+        q = (h @ wq).reshape(B, S, H, dh)
+        k = (h @ wk).reshape(B, S, H, dh)
+        v = (h @ wv).reshape(B, S, H, dh)
+        a = flash_attention(q, k, v, causal=True).reshape(B, S, D)
+        x2 = x + a @ wo
+        return x2 + jax.nn.gelu(rms(x2, g2) @ w1) @ w2
+
+    args = (wq, wk, wv, wo, w1, w2, g1, g2, x)
+    ref = np.asarray(jax.jit(block)(*args))
+    g, names = trace_to_graph(block, *args)
+    cg = StitchCompiler(mode="stitch").compile(g)
+    assert cg.stats.n_kernels == 1, cg.stats
+    assert cg.stats.pallas_groups == 1, cg.stats
+    out = cg(dict(zip(names, args)))
+    np.testing.assert_array_equal(np.asarray(out[g.outputs[0]]), ref)
+
+
+def test_unregistered_custom_still_partitions(rng):
+    """An opaque custom op with no registry entry keeps its partition-op
+    status — no silent attempt to inline arbitrary foreign kernels."""
+    from functools import partial
+
+    @partial(jax.custom_vjp)
+    def opaque(x):
+        return jnp.tanh(x) * 1.5
+
+    opaque.defvjp(lambda x: (opaque(x), x), lambda res, ct: (ct,))
+
+    def f(x, w):
+        return jax.nn.relu(opaque(x @ w) + 1.0)
+
+    x = jnp.asarray(rng.standard_normal((32, 64), np.float32))
+    w = jnp.asarray(rng.standard_normal((64, 64), np.float32) * 0.1)
+    g, names = trace_to_graph(f, x, w)
+    customs = [n for n in g.nodes.values()
+               if n.kind.value == "custom" and "project" not in n.attrs]
+    if not customs:
+        pytest.skip("custom_vjp traced away; nothing to assert")
+    cg = StitchCompiler(mode="stitch").compile(g)
+    groups_with_custom = [grp for grp in cg.groups
+                          if any(c.name in grp.members for c in customs)]
+    for grp in groups_with_custom:
+        assert len(grp.members) == 1, "unregistered custom must not fuse"

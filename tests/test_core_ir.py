@@ -75,14 +75,29 @@ def test_multi_step_widening_fuses_gemm_eventually():
 
 def test_exploratory_no_cycles_and_fusible_kinds():
     g = make_mlp_norm_graph()
-    pats = exploratory_fusion(g, None, GenConfig(seed_min_bytes=1024))
+    cfg = GenConfig(seed_min_bytes=1024)
+    pats = exploratory_fusion(g, None, cfg)
     assert pats, "exploratory fusion found nothing"
     for p in pats:
         assert not p.creates_cycle()
         for n in p.nodes:
+            # small GEMMs (below large_gemm_flops) and registered custom
+            # kernels are explorable alongside the classic fusible kinds
             assert n.kind in (
                 OpKind.ELEMENTWISE, OpKind.BROADCAST, OpKind.RESHAPE,
-                OpKind.TRANSPOSE, OpKind.REDUCTION, OpKind.BATCHED_GEMM)
+                OpKind.TRANSPOSE, OpKind.REDUCTION, OpKind.BATCHED_GEMM,
+                OpKind.GEMM, OpKind.CUSTOM)
+            if n.kind is OpKind.GEMM:
+                from repro.core.fusiongen import _gemm_flops
+                assert _gemm_flops(g, n) < cfg.large_gemm_flops
+
+
+def test_exploratory_excludes_large_gemms():
+    g = make_mlp_norm_graph()
+    # with the threshold at zero every GEMM is "large" -> never explored
+    cfg = GenConfig(seed_min_bytes=1024, large_gemm_flops=0.0)
+    for p in exploratory_fusion(g, None, cfg):
+        assert not any(n.kind is OpKind.GEMM for n in p.nodes)
 
 
 def test_contraction_cycle_detection():

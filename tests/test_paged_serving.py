@@ -202,9 +202,14 @@ def test_stitched_prefill_miss_then_upgrade(setup):
     """Prefills route through stitch(): before any plan lands each pow2
     bucket serves through the compiled fallback artifact (status pending),
     explicitly landed per-bucket plans upgrade later prefills, and tokens
-    are identical before and after the upgrade."""
+    are identical before and after the upgrade.
+
+    Seed 8 is deliberately tie-prone: before widening converts were folded
+    into GEMMs (trace._fold_widening_converts) the artifact executor's
+    logits wobbled one bf16 ulp off plain jit and this stream's argmax
+    flipped — the equality below is the regression test for that bug."""
     cfg, model, params = setup
-    rng = np.random.default_rng(1)
+    rng = np.random.default_rng(8)
     plens, news = (5, 12, 9, 17), (6, 3, 9, 4)
     prompts = [rng.integers(0, cfg.vocab, (p,)).astype(np.int32)
                for p in plens]

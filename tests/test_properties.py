@@ -152,6 +152,71 @@ def test_bandwidth_model_monotone(exp, mult):
     assert 0 < TPU_V5E.efficiency(v) < 1
 
 
+@st.composite
+def gemm_chain(draw):
+    """Random GEMM-bearing function: projections + nonlinearities over a
+    (r, k) activation, in f32 or bf16, with 1-3 chained dots."""
+    r = draw(st.sampled_from([8, 16, 32]))
+    k = draw(st.sampled_from([16, 32, 64]))
+    dims = [k] + [draw(st.sampled_from([16, 32, 64]))
+                  for _ in range(draw(st.integers(1, 3)))]
+    acts = [draw(st.sampled_from(["tanh", "gelu", "relu", "none"]))
+            for _ in range(len(dims) - 1)]
+    dtype = draw(st.sampled_from(["float32", "bfloat16"]))
+    return r, dims, acts, dtype
+
+
+@settings(max_examples=15, deadline=None)
+@given(gemm_chain(), st.integers(0, 2**31 - 1))
+def test_gemm_partitions_match_jit_bitwise(chain, seed):
+    """Stitched execution of GEMM-bearing partitions is BITWISE equal to
+    ``jax.jit`` of the same function — the accumulation dtype each dot was
+    traced with (``preferred_element_type``) is replayed explicitly, so the
+    op-by-op and fused executors round exactly where XLA rounds (the
+    logit-wobble regression)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import StitchCompiler, OpKind
+    from repro.core.codegen import accumulation_dtype
+    from repro.core.trace import trace_to_graph
+
+    r, dims, acts, dtype = chain
+    rng = np.random.default_rng(seed)
+
+    def mk(*shape):
+        return jnp.asarray(rng.standard_normal(shape).astype(np.float32) * 0.3,
+                           dtype)
+
+    ws = [mk(a, b) for a, b in zip(dims, dims[1:])]
+    x = mk(r, dims[0])
+
+    def f(x, *ws):
+        h = x
+        for w, act in zip(ws, acts):
+            h = h @ w
+            if act != "none":
+                h = getattr(jax.nn, act, jnp.tanh)(h)
+        return h
+
+    ref = np.asarray(jax.jit(f)(x, *ws))
+    g, names = trace_to_graph(f, x, *ws)
+    gemms = [n for n in g.nodes.values()
+             if n.kind in (OpKind.GEMM, OpKind.BATCHED_GEMM)]
+    assert gemms, "chain must trace to GEMM nodes"
+    for n in gemms:
+        acc = accumulation_dtype(n)
+        pref = n.attrs.get("preferred")
+        if pref is not None:
+            # the jaxpr's traced accumulation request is replayed verbatim
+            assert acc == jnp.dtype(pref)
+        else:
+            # float dots with no traced preference accumulate at >= f32
+            assert jnp.promote_types(acc, jnp.float32) == acc
+    out = StitchCompiler(mode="stitch").compile(g)(dict(zip(names, (x, *ws))))
+    np.testing.assert_array_equal(np.asarray(out[g.outputs[0]]), ref)
+
+
 # ------------------------------------------- training-path properties -------
 
 @settings(max_examples=8, deadline=None)
