@@ -7,10 +7,12 @@ baseline.
 Metric specs are **direction-aware** — ``(json path, label, direction)``
 where direction is ``"lower"`` (kernel counts, modeled times: growth beyond
 tolerance fails), ``"higher"`` (throughputs: a drop beyond tolerance
-fails), ``"exact"`` (structural counts that must not drift at all), or
+fails), ``"exact"`` (structural counts that must not drift at all),
 ``"positive"`` (liveness gates: the candidate value must be > 0 regardless
 of the baseline — a zero prefix-cache hit rate or zero stitched-prefill
-kernels means the feature silently stopped engaging).
+kernels means the feature silently stopped engaging), or ``"max:<bound>"``
+(absolute ceiling judged on the candidate alone — verifier findings must
+stay at 0, verify overhead under 5% of the cold compile).
 
 Gated sections:
 
@@ -27,6 +29,9 @@ Gated sections:
   on different hardware without loosening the deterministic gates.  The
   prefix-heavy sub-run adds two liveness gates (positive): the
   prefix-cache hit rate and the stitched-prefill kernel count;
+* **verify** — the static verifier's total ERROR findings across workload
+  plans (``max:0`` — any finding on a healthy build is a verifier or
+  compiler bug) and its worst in-compile overhead fraction (``max:0.05``);
 * **sharding** — per-shard stitched kernel counts / modeled times of the
   mesh-placed backward and packed-update graphs (lower), and the count of
   distinct mesh-keyed cache entries (exact: losing a placement means two
@@ -92,6 +97,14 @@ COMPUTE_METRICS = (
 MEASURED_REQUIRED_KEYS = ("rmsnorm_us", "softmax_us", "exec")
 MEASURED_EXEC_KEYS = ("measured_s", "modeled_time_s", "calls")
 
+# json paths inside the top-level "verify" section — the static verifier
+# must stay clean (zero ERROR findings across every workload plan) and
+# cheap (in-compile verification bounded at 5% of the cold compile)
+VERIFY_METRICS = (
+    (("findings_total",), "verify_findings_total", "max:0"),
+    (("max_overhead_frac",), "verify_max_overhead_frac", "max:0.05"),
+)
+
 # json paths inside the top-level "sharding" section
 SHARDING_METRICS = (
     (("grad_local", "kernels", "stitch"), "grad_local_stitched_kernels", "lower"),
@@ -128,6 +141,24 @@ def _gate_metric(b, c, label, direction, tolerance, failures, lines,
             verdict = "REGRESSION"
             failures.append(f"{row_name}.{label}: candidate {c:g} "
                             f"(must be > 0)")
+        b_str = f"{b:g}" if b is not None else "-"
+        lines.append(f"{row_name},{label},{b_str},{c:g},-,{verdict}")
+        return
+    if direction.startswith("max:"):
+        # absolute ceiling on the candidate; the baseline only decides
+        # whether a missing candidate value is lost coverage
+        bound = float(direction[4:])
+        if b is None and c is None:
+            return
+        if c is None:
+            failures.append(f"{row_name}.{label}: metric missing "
+                            f"from candidate (bound <= {bound:g})")
+            return
+        verdict = "OK"
+        if c > bound:
+            verdict = "REGRESSION"
+            failures.append(f"{row_name}.{label}: candidate {c:g} "
+                            f"exceeds bound {bound:g}")
         b_str = f"{b:g}" if b is not None else "-"
         lines.append(f"{row_name},{label},{b_str},{c:g},-,{verdict}")
         return
@@ -194,6 +225,8 @@ def compare(baseline: dict, candidate: dict, tolerance: float = TOLERANCE,
                   tolerance if serving_tolerance is None else serving_tolerance,
                   failures, lines)
     _gate_section(baseline, candidate, "sharding", SHARDING_METRICS,
+                  tolerance, failures, lines)
+    _gate_section(baseline, candidate, "verify", VERIFY_METRICS,
                   tolerance, failures, lines)
     _gate_section(baseline, candidate, "compute_stitching", COMPUTE_METRICS,
                   tolerance, failures, lines)

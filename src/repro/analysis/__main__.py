@@ -1,0 +1,179 @@
+"""Offline static-verification CLI.
+
+::
+
+    # audit every persisted plan record in a StitchCache directory
+    PYTHONPATH=src python -m repro.analysis --cache-dir /tmp/stitch
+
+    # trace bundled model configs and audit their compiled plans
+    PYTHONPATH=src python -m repro.analysis --configs qwen3_1_7b phi3_mini_3_8b
+    PYTHONPATH=src python -m repro.analysis --configs          # all of them
+
+Exit code 1 when any ERROR finding is emitted, 0 otherwise (WARNs don't
+fail the run) — CI gates on this.  The cache-dir audit is zero-jax: it
+checks record *structure* (readable JSON, known group kinds, in-range
+canonical indices, disjoint members) without a live graph; the full
+graph-vs-record check runs online at replay (:meth:`StitchCache.lookup`).
+The config audit imports jax: it traces each reduced config's train
+forward, compiles it, and runs :func:`verify_compiled`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .findings import Finding, errors, format_findings, summarize
+from .plan import _RECORD_KINDS
+
+
+def audit_cache_dir(directory: str) -> dict[str, list[Finding]]:
+    """Structural audit of every ``plan_*.json`` under ``directory``;
+    returns findings keyed by file name (files with none are included, so
+    the caller can report coverage)."""
+    from repro.cache.store import PlanRecord
+
+    out: dict[str, list[Finding]] = {}
+    for path in sorted(Path(directory).glob("plan_*.json")):
+        findings: list[Finding] = []
+        rec = None
+        try:
+            with open(path) as f:
+                rec = PlanRecord.from_json(json.load(f))
+        except Exception as err:
+            findings.append(Finding(
+                "RA050", f"unreadable plan record: "
+                         f"{type(err).__name__}: {err}"))
+        if rec is not None:
+            findings += _audit_record_structure(rec)
+        # rec is None with no findings == stale record version: a silent
+        # miss at runtime, not corruption
+        out[path.name] = findings
+    return out
+
+
+def _audit_record_structure(rec) -> list[Finding]:
+    findings: list[Finding] = []
+    owner: dict[int, int] = {}
+    for i, gr in enumerate(rec.groups):
+        if gr.kind not in _RECORD_KINDS:
+            findings.append(Finding(
+                "RA028", f"group kind {gr.kind!r} not one of "
+                         f"{_RECORD_KINDS}", group=i))
+        bad = [j for j in list(gr.members) + list(gr.scratch or ())
+               if not isinstance(j, int) or not 0 <= j < rec.n_nodes]
+        if bad:
+            findings.append(Finding(
+                "RA020", f"canonical indices {bad[:6]} out of range "
+                         f"[0, {rec.n_nodes})", group=i))
+        for j in gr.members:
+            if isinstance(j, int) and j in owner:
+                findings.append(Finding(
+                    "RA021", f"canonical node {j} owned by groups "
+                             f"{owner[j]} and {i}", group=i))
+            elif isinstance(j, int):
+                owner[j] = i
+    return findings
+
+
+def audit_configs(names: list[str]) -> dict[str, list[Finding]]:
+    """Trace each bundled config's train forward, compile it, and run the
+    full IR + plan audit.  Imports jax (slow path)."""
+    import numpy as np
+
+    import jax.numpy as jnp
+
+    from repro.configs import get_reduced
+    from repro.core.compiler import StitchCompiler
+    from repro.core.trace import trace_to_graph
+    from repro.models import build_model
+
+    from .plan import verify_compiled
+
+    out: dict[str, list[Finding]] = {}
+    for name in names:
+        cfg = get_reduced(name)
+        model = build_model(cfg)
+        import jax
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32)
+        batch = {"tokens": toks, "labels": toks}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.zeros(
+                (2, cfg.n_patch_tokens, cfg.d_model), cfg.dtype)
+        if cfg.family == "audio":
+            batch["frames"] = jnp.asarray(
+                rng.standard_normal((2, 32, cfg.d_model)), cfg.dtype)
+        # trace the FULL (loss, metrics) output: tracing only the loss
+        # leaves the metrics' nodes dead in the graph, and every one would
+        # (correctly) surface as an RA005 warning
+        g, _ = trace_to_graph(lambda p: model.train_forward(p, batch),
+                              params, name=name)
+        # use_pallas=False: the audit cares about plan legality, not kernel
+        # build time; verify="off" here because verify_compiled below runs
+        # the superset (IR pass + cover + pattern-class recount)
+        compiler = StitchCompiler(use_pallas=False, verify="off")
+        cg = compiler.compile(g)
+        budget = compiler.gen_cfg.scratch_budget
+        if budget is None:
+            budget = compiler.hw.onchip_budget
+        out[name] = verify_compiled(cg, scratch_budget=budget,
+                                    cost=compiler.cost)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static verification of stitching artifacts (offline)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="StitchCache directory: structural audit of every "
+                         "persisted plan record")
+    ap.add_argument("--configs", nargs="*", default=None,
+                    help="bundled model configs to trace+compile+audit "
+                         "(no names = all)")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable output")
+    args = ap.parse_args(argv)
+    if args.cache_dir is None and args.configs is None:
+        ap.error("nothing to audit: give --cache-dir and/or --configs")
+
+    sections: dict[str, dict[str, list[Finding]]] = {}
+    if args.cache_dir is not None:
+        sections["cache"] = audit_cache_dir(args.cache_dir)
+    if args.configs is not None:
+        names = args.configs
+        if not names:
+            from repro.configs import ARCHS
+            names = list(ARCHS)
+        sections["configs"] = audit_configs(names)
+
+    all_findings = [f for sec in sections.values()
+                    for fs in sec.values() for f in fs]
+    if args.json:
+        print(json.dumps({
+            "summary": summarize(all_findings),
+            "sections": {
+                sec: {k: [f.as_dict() for f in fs] for k, fs in items.items()}
+                for sec, items in sections.items()
+            },
+        }, indent=2))
+    else:
+        for sec, items in sections.items():
+            print(f"== {sec}: {len(items)} artifact(s) audited ==")
+            for k, fs in items.items():
+                if fs:
+                    print(f"-- {k} --")
+                    print(format_findings(fs))
+            clean = sum(1 for fs in items.values() if not fs)
+            print(f"   {clean}/{len(items)} clean")
+        s = summarize(all_findings)
+        print(f"total: {s['errors']} error(s), {s['warnings']} warning(s)")
+    return 1 if errors(all_findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,107 @@
+"""Pass 3 — aliasing/donation sanitizer.
+
+``repro.exec.stitch(donate_argnums=...)`` lets callers donate input
+buffers.  Donation is only safe when the donated value is (a) not itself
+returned (an output passthrough aliases the dead buffer) and (b) fully
+consumed by the time its first reader finishes — under a group schedule,
+read by exactly one group, or only by groups no later than the donating
+one.  PR 5 fixed this bug class *dynamically* (``_donate`` keeps leaves
+whose id reappears in the outputs); this pass detects both hazards
+statically from the graph + plan, so they surface at compile/report time
+with provenance instead of as a mysterious runtime keep.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+from repro.core.ir import Graph
+
+from .findings import Finding
+
+__all__ = ["check_donation"]
+
+
+def _group_schedule(g: Graph, groups: Sequence[frozenset[str]] | None
+                    ) -> list[frozenset[str]]:
+    """Execution-ordered groups; defaults to one group per compute node in
+    topo order (the mode="off" schedule)."""
+    if groups is None:
+        return [frozenset([n.name]) for n in g.compute_nodes()
+                if n.name in set(g.topo_order())]
+    owner: dict[str, int] = {}
+    for i, members in enumerate(groups):
+        for m in members:
+            owner[m] = i
+    # Kahn over the induced DAG (same edges as CompiledGraph._schedule);
+    # on a cyclic plan (RA023 elsewhere) fall back to given order.
+    n = len(groups)
+    indeg = [0] * n
+    succs: list[set[int]] = [set() for _ in range(n)]
+    for name, gid in owner.items():
+        if name not in g.nodes:
+            continue
+        for o in g.nodes[name].operands:
+            src = owner.get(o)
+            if src is not None and src != gid and gid not in succs[src]:
+                succs[src].add(gid)
+                indeg[gid] += 1
+    ready = [i for i in range(n) if indeg[i] == 0]
+    order: list[int] = []
+    while ready:
+        cur = ready.pop(0)
+        order.append(cur)
+        for s in sorted(succs[cur]):
+            indeg[s] -= 1
+            if indeg[s] == 0:
+                ready.append(s)
+    if len(order) != n:
+        order = list(range(n))
+    return [frozenset(groups[i]) for i in order]
+
+
+def check_donation(
+    g: Graph,
+    donated: Iterable[str],
+    groups: Sequence[frozenset[str]] | None = None,
+) -> list[Finding]:
+    """Statically audit donated parameter names against graph + plan.
+
+    RA030 (ERROR): a donated input is itself a graph output — the
+    passthrough aliases a buffer the runtime considers dead.
+    RA031 (ERROR): a donated input is read by a group scheduled *after*
+    the donating (first-reader) group — the second read would observe a
+    reused buffer.
+    RA032 (WARN): the donated name is not a parameter of this graph (or
+    nothing reads it) — the donation is a no-op and likely a caller bug.
+    """
+    findings: list[Finding] = []
+    schedule = _group_schedule(g, groups)
+    for name in sorted(set(donated)):
+        node = g.nodes.get(name)
+        if node is None or not node.is_source():
+            findings.append(Finding(
+                "RA032", f"donated name {name!r} is not a graph input",
+                node=name))
+            continue
+        if name in g.outputs:
+            findings.append(Finding(
+                "RA030", f"donated input {name!r} is passed through as a "
+                         f"graph output", node=name))
+        readers = [i for i, members in enumerate(schedule)
+                   if any(name in g.nodes[m].operands for m in members
+                          if m in g.nodes)]
+        if not readers:
+            if name not in g.outputs:
+                findings.append(Finding(
+                    "RA032", f"donated input {name!r} is never read",
+                    node=name))
+            continue
+        first = readers[0]
+        late = [i for i in readers[1:] if i != first]
+        if late:
+            findings.append(Finding(
+                "RA031", f"donated input {name!r} read by group(s) {late} "
+                         f"after donating group {first}", node=name,
+                group=late[0]))
+    return findings

@@ -1,0 +1,168 @@
+"""Pass 4 — KV/refcount auditor: conservation over a paged-KV snapshot.
+
+The paged serving stack shares pages three ways: slot page tables
+(``PagedKV._slot_pages``), the content-hashed prefix cache
+(``PrefixCache`` entries), and the refcounted free-list allocator
+(``PageAllocator``).  The conservation law: every usable page (1..N-1;
+page 0 is the sink) is either on the free list or refcounted, never
+both, and its refcount equals the number of owners holding it (slot
+lists + prefix entries).  Leaked pages (refcounted, no owner) and
+double-owned pages (more owners than refs) are the two bug classes that
+silently shrink or corrupt the pool under load — both are ERRORs here.
+
+``snapshot`` reads the live objects duck-typed (plain ints/lists only,
+no jax arrays cross the boundary), so ``audit_kv`` stays executable in a
+jax-free process and on serialized snapshots.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .findings import Finding
+
+__all__ = ["KVSnapshot", "snapshot", "audit_kv"]
+
+
+@dataclass
+class KVSnapshot:
+    """Pure-data view of allocator + page tables + prefix cache."""
+
+    num_pages: int                       # including the page-0 sink
+    free: list[int] = field(default_factory=list)
+    refs: dict[int, int] = field(default_factory=dict)
+    slot_pages: list[list[int]] = field(default_factory=list)
+    prefix_pages: dict[str, list[int]] = field(default_factory=dict)
+    # optional: the device-facing table rows (slots x pages_per_slot);
+    # unowned tail entries must point at the page-0 sink
+    table: list[list[int]] | None = None
+    slot_lengths: list[int] | None = None
+    page_size: int | None = None
+    # False when captured from a bare allocator: free/refcount conservation
+    # still holds, but "who owns this page" is unknowable, so the
+    # leak/double-own checks are skipped
+    owners_known: bool = True
+
+
+def snapshot(kv=None, allocator=None, prefix=None) -> KVSnapshot:
+    """Duck-typed capture of a live ``PagedKV`` (or bare ``PageAllocator``)
+    plus an optional ``PrefixCache``."""
+    if allocator is None:
+        if kv is None:
+            raise ValueError("need a PagedKV or a PageAllocator")
+        allocator = kv.allocator
+    snap = KVSnapshot(
+        num_pages=int(allocator.num_pages),
+        free=[int(p) for p in allocator._free],
+        refs={int(p): int(r) for p, r in allocator._refs.items()},
+        owners_known=kv is not None or prefix is not None,
+    )
+    if kv is not None:
+        snap.slot_pages = [[int(p) for p in pages]
+                           for pages in kv._slot_pages]
+        snap.table = [[int(p) for p in row] for row in kv.table]
+        snap.slot_lengths = [int(x) for x in kv.lengths]
+        snap.page_size = int(kv.page_size)
+    if prefix is not None:
+        snap.prefix_pages = {key: [int(p) for p in e.pages]
+                             for key, e in prefix._entries.items()}
+    return snap
+
+
+def audit_kv(snap: KVSnapshot) -> list[Finding]:
+    """Run the conservation checks; returns all findings (empty = clean)."""
+    findings: list[Finding] = []
+    usable = range(1, snap.num_pages)
+    free_set = set(snap.free)
+
+    # -- free-list structure -----------------------------------------------
+    if len(free_set) != len(snap.free):
+        dups = sorted({p for p in snap.free if snap.free.count(p) > 1})
+        findings.append(Finding(
+            "RA045", f"free list contains duplicates {dups[:6]}",
+            page=dups[0]))
+    for p in sorted(free_set):
+        if not 1 <= p < snap.num_pages:
+            findings.append(Finding(
+                "RA045", f"free list holds out-of-range/sink page {p} "
+                         f"(usable: 1..{snap.num_pages - 1})", page=p))
+
+    # -- owners: slot tables + prefix entries ------------------------------
+    owners: dict[int, list[str]] = {}
+    for slot, pages in enumerate(snap.slot_pages):
+        for p in pages:
+            owners.setdefault(p, []).append(f"slot{slot}")
+    for key, pages in snap.prefix_pages.items():
+        for p in pages:
+            owners.setdefault(p, []).append(f"prefix:{key[:8]}")
+    for p in sorted(owners):
+        if not 1 <= p < snap.num_pages:
+            findings.append(Finding(
+                "RA045", f"owned page {p} out of usable range "
+                         f"(owners: {owners[p]})", page=p))
+
+    # -- conservation ------------------------------------------------------
+    for p in usable:
+        on_free = p in free_set
+        refs = snap.refs.get(p)
+        own = owners.get(p, [])
+        if on_free and refs is not None:
+            findings.append(Finding(
+                "RA041", f"page {p} is on the free list with refcount "
+                         f"{refs}", page=p))
+            continue
+        if not on_free and refs is None:
+            findings.append(Finding(
+                "RA040", f"page {p} is neither free nor allocated"
+                         + (f" (owners: {own})" if own else ""), page=p))
+            continue
+        if on_free:
+            if own:
+                findings.append(Finding(
+                    "RA046", f"free page {p} still owned by {own}", page=p))
+            continue
+        # allocated: refcount must match owner count
+        if refs is not None and refs < 1:
+            findings.append(Finding(
+                "RA042", f"page {p} has non-positive refcount {refs}",
+                page=p))
+        elif not snap.owners_known:
+            pass                      # bare allocator: no ownership to check
+        elif not own:
+            findings.append(Finding(
+                "RA043", f"page {p} refcounted ({refs}) but owned by "
+                         f"nobody — leaked", page=p))
+        elif len(own) > refs:
+            findings.append(Finding(
+                "RA044", f"page {p} owned {len(own)}x ({own}) but "
+                         f"refcount is {refs} — double-owned", page=p))
+        elif len(own) < refs:
+            findings.append(Finding(
+                "RA042", f"page {p} refcount {refs} != owner count "
+                         f"{len(own)} ({own})", page=p))
+    for p, r in sorted(snap.refs.items()):
+        if not 1 <= p < snap.num_pages:
+            findings.append(Finding(
+                "RA045", f"refcount table holds out-of-range/sink page {p} "
+                         f"(refs={r})", page=p))
+
+    # -- device table rows vs host ownership -------------------------------
+    if snap.table is not None:
+        for slot, row in enumerate(snap.table):
+            owned = snap.slot_pages[slot] if slot < len(snap.slot_pages) \
+                else []
+            want = owned + [0] * (len(row) - len(owned))
+            if list(row) != want:
+                findings.append(Finding(
+                    "RA047", f"slot {slot} table row {list(row)} != owned "
+                             f"pages {owned} + sink padding", group=slot))
+        if snap.slot_lengths is not None and snap.page_size:
+            for slot, ln in enumerate(snap.slot_lengths):
+                owned = len(snap.slot_pages[slot]) \
+                    if slot < len(snap.slot_pages) else 0
+                need = -(-ln // snap.page_size)       # ceil
+                if ln and owned < need:
+                    findings.append(Finding(
+                        "RA047", f"slot {slot} length {ln} needs {need} "
+                                 f"page(s), owns {owned}", group=slot))
+    return findings

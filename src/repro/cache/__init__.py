@@ -10,7 +10,21 @@ from .policy import BucketPolicy, BucketStats, EvictionPolicy
 from .signature import (GraphSignature, compute_signature, node_struct_hashes,
                         placement_key, token_prefix_keys)
 from .store import DiskStore, GroupRecord, MemoryStore, PlanRecord, TwoTierStore
-from .service import CompilationService, StitchCache, extract_record, replay_record
+
+# service.py reaches into repro.core.compiler (jax); the record/policy/
+# signature layers above are pure Python.  Lazy-loading the service keeps
+# the on-disk record format — what the repro.analysis offline cache audit
+# reads — importable in a jax-free process.
+_LAZY = {"CompilationService": ".service", "StitchCache": ".service",
+         "extract_record": ".service", "replay_record": ".service"}
+
+
+def __getattr__(name):
+    submodule = _LAZY.get(name)
+    if submodule is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    from importlib import import_module
+    return getattr(import_module(submodule, __name__), name)
 
 __all__ = [
     "BucketPolicy", "BucketStats", "EvictionPolicy",

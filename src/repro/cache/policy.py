@@ -67,6 +67,10 @@ class BucketStats:
     misses: dict[str, int] = field(default_factory=dict)
     placement_hits: dict[str, int] = field(default_factory=dict)
     placement_misses: dict[str, int] = field(default_factory=dict)
+    # unreadable record files per bucket (disk JSON corruption read as a miss)
+    corrupt: dict[str, int] = field(default_factory=dict)
+    # records demoted to a miss by replay verification (repro.analysis)
+    demoted: dict[str, int] = field(default_factory=dict)
 
     def record(self, bucket: str, hit: bool, placement: str = "") -> None:
         d = self.hits if hit else self.misses
@@ -74,6 +78,12 @@ class BucketStats:
         p = self.placement_hits if hit else self.placement_misses
         label = placement or "single-device"
         p[label] = p.get(label, 0) + 1
+
+    def record_corrupt(self, bucket: str) -> None:
+        self.corrupt[bucket] = self.corrupt.get(bucket, 0) + 1
+
+    def record_demoted(self, bucket: str) -> None:
+        self.demoted[bucket] = self.demoted.get(bucket, 0) + 1
 
     @property
     def total_hits(self) -> int:
@@ -94,6 +104,10 @@ class BucketStats:
         return {
             "total_hits": self.total_hits,
             "total_misses": self.total_misses,
+            "total_corrupt": sum(self.corrupt.values()),
+            "total_demoted": sum(self.demoted.values()),
+            "corrupt": dict(self.corrupt),
+            "demoted": dict(self.demoted),
             "per_bucket": {
                 b: {"hits": self.hits.get(b, 0), "misses": self.misses.get(b, 0)}
                 for b in sorted(set(self.hits) | set(self.misses))

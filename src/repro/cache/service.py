@@ -112,6 +112,7 @@ def replay_record(
     )
     groups: list[_Group] = []
     covered: set[str] = set()
+    diag_start = len(compiler.tuner.diagnostics)
     for gr in rec.groups:
         members = frozenset(names[i] for i in gr.members)
         covered |= members
@@ -144,6 +145,7 @@ def replay_record(
         if node.name not in covered:
             groups.append(_Group(frozenset([node.name]), "op"))
     stats.n_kernels = len(groups)
+    stats.diagnostics = list(compiler.tuner.diagnostics[diag_start:])
     stats.modeled_time = compiler.modeled_time(g, [grp.members for grp in groups])
     return CompiledGraph(g, groups, stats)
 
@@ -160,13 +162,16 @@ class StitchCache:
         eviction = eviction or EvictionPolicy()
         self.bucket_policy = bucket_policy or BucketPolicy()
         disk = (
-            DiskStore(directory, max_entries=eviction.disk_entries)
+            DiskStore(directory, max_entries=eviction.disk_entries,
+                      on_corrupt=self._note_corrupt)
             if directory is not None
             else None
         )
         self.store = TwoTierStore(MemoryStore(eviction.memory_entries), disk)
         self.stats = BucketStats()
         self._lock = threading.RLock()
+        # keys whose replayed record failed static verification (warn once)
+        self._verify_warned: set[tuple] = set()
         # Live-artifact memo: (id(graph), mode, hw, use_pallas) -> (graph,
         # artifact, bucket, node count at memo time).  Replay on a record rebuilds
         # Pallas callables (cheap but not free); recompiling the *same*
@@ -217,6 +222,11 @@ class StitchCache:
                            cfg_key)
         with self._lock:
             rec = self.store.get(key)
+        if rec is not None and getattr(compiler, "verify", "plans") != "off":
+            # static plan verification against the *live* graph: a stale,
+            # corrupt, or hand-edited record is demoted to a miss here —
+            # never instantiated — and the recompile overwrites it
+            rec = self._verified(g, sig, rec, compiler, key)
         compiled = None
         if rec is not None:
             try:
@@ -230,6 +240,40 @@ class StitchCache:
                 self.stats.record(key[1], hit=compiled is not None,
                                   placement=placement)
         return compiled
+
+    def _note_corrupt(self, key: tuple) -> None:
+        """DiskStore callback: count an unreadable record in bucket stats."""
+        with self._lock:
+            self.stats.record_corrupt(key[1])
+
+    def _verified(self, g: Graph, sig: GraphSignature, rec: PlanRecord,
+                  compiler, key: tuple) -> PlanRecord | None:
+        from repro.analysis import errors, format_findings, verify_record
+
+        budget = getattr(compiler, "gen_cfg", None)
+        budget = budget.scratch_budget if budget is not None else None
+        if budget is None:
+            budget = compiler.hw.onchip_budget
+        findings = verify_record(g, sig.canon_order, rec,
+                                 scratch_budget=budget, cost=compiler.cost)
+        bad = errors(findings)
+        if not bad:
+            return rec
+        with self._lock:
+            self.stats.record_demoted(key[1])
+            warn = key not in self._verify_warned
+            self._verify_warned.add(key)
+        if warn:
+            import warnings
+
+            warnings.warn(
+                f"cached plan for graph {g.name!r} (bucket {key[1][:12]}) "
+                f"failed static verification and was demoted to a miss:\n"
+                f"{format_findings(bad, limit=5)}",
+                RuntimeWarning, stacklevel=4)
+        obs.event("cache.verify_demote", cat="cache", graph=g.name,
+                  bucket=key[1], codes=sorted({f.code for f in bad}))
+        return None
 
     def _remember_live(self, g: Graph, compiled: CompiledGraph, compiler,
                        bucket: str) -> None:
@@ -272,6 +316,7 @@ class StitchCache:
             out["disk_put_errors"] = self.store.disk_put_errors
             if self.store.disk is not None:
                 out["disk_entries"] = len(self.store.disk)
+                out["disk_corrupt_reads"] = self.store.disk.corrupt_reads
         return out
 
 

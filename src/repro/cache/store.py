@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import json
 import os
+import warnings
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from pathlib import Path
@@ -142,11 +143,22 @@ class MemoryStore:
 
 
 class DiskStore:
-    """One atomic JSON file per entry; survives process restarts."""
+    """One atomic JSON file per entry; survives process restarts.
 
-    def __init__(self, directory: str | os.PathLike, max_entries: int | None = None):
+    A truncated/corrupt/garbage record file reads as a *miss*: the first
+    encounter per file emits one ``RuntimeWarning`` (and calls
+    ``on_corrupt(key)`` so the owner can count it in its bucket stats);
+    it never propagates an exception into the compile path — the plan
+    simply recompiles and the next ``put`` overwrites the bad file.
+    """
+
+    def __init__(self, directory: str | os.PathLike, max_entries: int | None = None,
+                 on_corrupt=None):
         self.directory = Path(directory)
         self.max_entries = max_entries
+        self.on_corrupt = on_corrupt
+        self.corrupt_reads = 0
+        self._warned_corrupt: set[str] = set()
 
     def _path(self, key: tuple) -> Path:
         graph_key, bucket_key, mode, hw, placement, config = key
@@ -167,11 +179,26 @@ class DiskStore:
         try:
             with open(path) as f:
                 rec = PlanRecord.from_json(json.load(f))
-        except (json.JSONDecodeError, KeyError, OSError):
-            return None                  # unreadable entry == miss
+        except OSError:
+            return None                  # transient read failure == miss
+        except Exception as err:         # truncated JSON, wrong-typed body,
+            self._note_corrupt(path, key, err)   # missing fields, ...
+            return None
         if rec is not None and rec.key != key:
             return None                  # 12-hex-char filename collision
         return rec
+
+    def _note_corrupt(self, path: Path, key: tuple, err: Exception) -> None:
+        self.corrupt_reads += 1
+        if self.on_corrupt is not None:
+            self.on_corrupt(key)
+        sp = str(path)
+        if sp not in self._warned_corrupt:
+            self._warned_corrupt.add(sp)
+            warnings.warn(
+                f"discarding corrupt plan record {path} "
+                f"({type(err).__name__}: {err}); treating as a cache miss",
+                RuntimeWarning, stacklevel=4)
 
     def put(self, rec: PlanRecord) -> None:
         self.directory.mkdir(parents=True, exist_ok=True)

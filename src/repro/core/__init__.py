@@ -11,7 +11,6 @@ Public surface:
     StitchCompiler / CompiledGraph    — end-to-end optimize-and-execute
 """
 
-from .compiler import CompiledGraph, FusionStats, StitchCompiler, xla_like_groups
 from .cost import CostModel, HardwareModel, TPU_V5E, V100
 from .fusiongen import GenConfig, exploratory_fusion, generate_patterns, multi_step_substitution, substitution_fusion
 from .ilp import ILPSolver, PlanResult, greedy_fusion_plan, solve_fusion_plan
@@ -20,7 +19,25 @@ from .pattern import FusionPattern, PatternClass, contraction_creates_cycle
 from .scratch import ScratchAllocator, ScratchPlan, dominator_tree, post_dominates
 from .templates import Template, parse_template
 from .tuner import TemplateTuner, TunedKernel, generate_templates
-from .codegen import build_reference_fn, build_per_op_fns, emit_source
+
+# compiler/codegen import jax at module level; everything above is pure
+# Python.  Loading them lazily (PEP 562) keeps `import repro.core` — and
+# with it the repro.analysis static verifier — usable in a jax-free
+# process, e.g. the offline cache audit in CI.
+_LAZY = {
+    "CompiledGraph": ".compiler", "FusionStats": ".compiler",
+    "StitchCompiler": ".compiler", "xla_like_groups": ".compiler",
+    "build_reference_fn": ".codegen", "build_per_op_fns": ".codegen",
+    "emit_source": ".codegen",
+}
+
+
+def __getattr__(name):
+    submodule = _LAZY.get(name)
+    if submodule is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    from importlib import import_module
+    return getattr(import_module(submodule, __name__), name)
 
 __all__ = [
     "Graph", "GraphBuilder", "OpNode", "OpKind", "ReduceKind",

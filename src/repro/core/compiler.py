@@ -110,6 +110,13 @@ class FusionStats:
     ilp: PlanResult | None = None
     cache_status: str = "off"        # "off" | "miss" | "hit"
     compile_seconds: float = 0.0     # wall time spent producing this artifact
+    # static verification summary ({"errors", "warnings", "codes"}) when the
+    # compiler ran with verify != "off"; None when verification was skipped
+    verify: dict | None = None
+    verify_seconds: float = 0.0      # wall time of the verification passes
+    # structured StitchInfeasible diagnostics from tuning: why a chosen
+    # pattern degraded to a fused-jnp group instead of a Pallas kernel
+    diagnostics: list = field(default_factory=list)
 
     @property
     def compression(self) -> float:
@@ -209,8 +216,10 @@ class StitchCompiler:
         cache=None,
         placement: str = "",
         plan_budget: float | None = None,
+        verify: str = "plans",
     ):
         assert mode in ("off", "xla", "stitch")
+        assert verify in ("off", "plans", "full")
         self.hw = hw
         self.mode = mode
         self.gen_cfg = gen_cfg or GenConfig()
@@ -229,6 +238,11 @@ class StitchCompiler:
         # plan solved for one mesh's shard-local shapes never replays at
         # another.  "" = single-device / unplaced.
         self.placement = placement
+        # Static verification level (repro.analysis): "plans" runs the plan
+        # verifier post-ILP/pre-tune and refuses ERROR plans; "full" also
+        # runs the IR verifier on the graph; "off" skips both.  The same
+        # knob gates cache-replay verification (StitchCache.lookup).
+        self.verify = verify
 
     # -- planning -------------------------------------------------------------
     def plan(self, g: Graph) -> tuple[list[FusionPattern], PlanResult | None]:
@@ -257,6 +271,37 @@ class StitchCompiler:
                 scratch_budget=scratch_budget)
             s.set(method=result.method, chosen=len(result.chosen))
         return result.chosen, result
+
+    # -- static verification (repro.analysis passes 1-2) -----------------------
+    def verify_chosen(self, g: Graph, chosen: list[FusionPattern]) -> dict:
+        """Run the static verifier on a proposed plan (post-ILP, pre-tune).
+
+        ``verify="plans"`` checks the plan invariants (disjointness, induced
+        acyclicity, scratch budget, registry membership); ``verify="full"``
+        additionally runs the IR verifier on the graph.  ERROR findings
+        raise :class:`repro.analysis.VerificationError` — the compiler
+        refuses to tune or execute an illegal plan.  Returns the findings
+        summary recorded into :class:`FusionStats`.
+        """
+        from repro.analysis import (VerificationError, errors, summarize,
+                                    verify_graph, verify_plan)
+
+        findings = []
+        if self.verify == "full":
+            findings += verify_graph(g)
+        budget = None
+        if self.mode == "stitch":
+            budget = self.gen_cfg.scratch_budget
+            if budget is None:
+                budget = self.hw.onchip_budget
+        findings += verify_plan(g, chosen, require_cover=False,
+                                scratch_budget=budget, cost=self.cost)
+        if errors(findings):
+            obs.event("compile.verify_reject", cat="compile", graph=g.name,
+                      codes=sorted({f.code for f in errors(findings)}))
+            raise VerificationError(
+                f"fusion plan for graph {g.name!r} rejected", findings)
+        return summarize(findings)
 
     # -- modeled whole-graph time (Table 3's perf metric) ----------------------
     def modeled_time(self, g: Graph, groups: list[frozenset[str]]) -> float:
@@ -289,15 +334,23 @@ class StitchCompiler:
                     osp.set(cache="hit", n_kernels=hit.stats.n_kernels)
                     return hit
         chosen, ilp = self.plan(g)
+        verify_summary = None
+        verify_seconds = 0.0
+        if self.verify != "off":
+            tv = _time.perf_counter()
+            verify_summary = self.verify_chosen(g, chosen)
+            verify_seconds = _time.perf_counter() - tv
         covered: set[str] = set()
         for p in chosen:
             covered |= p.members
 
         groups: list[_Group] = []
         stats = FusionStats(
-            mode=self.mode, n_ops=len(g.compute_nodes()), n_kernels=0, ilp=ilp
+            mode=self.mode, n_ops=len(g.compute_nodes()), n_kernels=0, ilp=ilp,
+            verify=verify_summary, verify_seconds=verify_seconds,
         )
 
+        diag_start = len(self.tuner.diagnostics)
         with obs.span("compile.tune", cat="compile", graph=g.name,
                       patterns=len(chosen)):
             for p in chosen:
@@ -318,6 +371,9 @@ class StitchCompiler:
                         stats.patterns_with_scratch += 1
                 else:
                     groups.append(_Group(p.members, "jnp"))
+
+        # why patterns degraded to fused-jnp during this tuning run
+        stats.diagnostics = list(self.tuner.diagnostics[diag_start:])
 
         # singleton groups for uncovered compute ops
         for node in g.compute_nodes():

@@ -72,21 +72,52 @@ def _attrs_for_node(node, row_block: int, seq_small_reduce: bool) -> tuple[Attr,
     return tuple(attrs)
 
 
+def _diagnostic(p: FusionPattern, stage: str, err: Exception) -> dict:
+    """Structured record of one StitchInfeasible: which pattern, at which
+    tuning stage, and the human-readable reason — surfaced through
+    ``FusionStats.diagnostics`` / ``report()["diagnostics"]`` instead of
+    being silently swallowed into a fused-jnp fallback."""
+    members = sorted(n.name for n in p.compute_members)
+    return {
+        "stage": stage,                  # "analyze" | "build" | "measure"
+        "pattern_class": p.pattern_class,
+        "members": members[:8],
+        "n_members": len(members),
+        "reason": str(err),
+    }
+
+
+def _note_diagnostic(diagnostics: list | None, p: FusionPattern, stage: str,
+                     err: Exception, bound: int = 256) -> None:
+    from repro import obs
+
+    d = _diagnostic(p, stage, err)
+    obs.event("tune.infeasible", cat="compile", **d)
+    if diagnostics is None:
+        return
+    diagnostics.append(d)
+    if len(diagnostics) > bound:
+        del diagnostics[: len(diagnostics) - bound]
+
+
 def generate_templates(
-    p: FusionPattern, cost: CostModel, max_templates: int = 12
+    p: FusionPattern, cost: CostModel, max_templates: int = 12,
+    diagnostics: list | None = None,
 ) -> list[Template]:
     """TemplatesGeneration: row-block sweep x scratch-storage choice.
 
     Scratch choice: heavy-crossing intermediates (the cost model's
     scratch_request set) either all go to VMEM (block composition) or stay in
     VREG (thread composition) when small enough; both variants are emitted so
-    KernelEvalUpdate can pick.
+    KernelEvalUpdate can pick.  An infeasible pattern yields no templates;
+    when ``diagnostics`` is given the reason is appended to it.
     """
     from repro.kernels.stitched import StitchInfeasible, analyze_pattern
 
     try:
         ana = analyze_pattern(p)
-    except StitchInfeasible:
+    except StitchInfeasible as err:
+        _note_diagnostic(diagnostics, p, "analyze", err)
         return []
     req = cost.scratch_request(p)
     templates: list[Template] = []
@@ -113,15 +144,27 @@ def generate_templates(
 class TemplateTuner:
     """Alg. 3 driver."""
 
+    # keep the diagnostics log bounded: a long-lived serving process tunes
+    # many graphs and only the recent tail is useful for debugging
+    MAX_DIAGNOSTICS = 256
+
     def __init__(self, hw: HardwareModel = TPU_V5E, execution_based: bool = False):
         self.hw = hw
         self.cost = CostModel(hw)
         self.execution_based = execution_based
+        # structured StitchInfeasible records (see _diagnostic); the compiler
+        # snapshots the slice produced by each graph's tuning run into
+        # FusionStats.diagnostics
+        self.diagnostics: list[dict] = []
         # ScratchAllocator builds a whole-graph post-dominator tree; reuse it
         # across the many (pattern, template) pairs of one graph's tuning run.
         # Keyed by graph identity, invalidated when the graph grows OR its
         # outputs change (mark_output moves the virtual post-dominance sink).
         self._allocators: dict[int, tuple[ScratchAllocator, int, tuple]] = {}
+
+    def _note_infeasible(self, p: FusionPattern, stage: str, err: Exception) -> None:
+        _note_diagnostic(self.diagnostics, p, stage, err,
+                         bound=self.MAX_DIAGNOSTICS)
 
     def _allocator(self, g) -> ScratchAllocator:
         hit = self._allocators.get(id(g))
@@ -192,7 +235,8 @@ class TemplateTuner:
     def tune(self, p: FusionPattern, sample_inputs: list | None = None) -> TunedKernel | None:
         from repro.kernels.stitched import StitchInfeasible, build_stitched_callable
 
-        templates = generate_templates(p, self.cost)
+        templates = generate_templates(p, self.cost,
+                                       diagnostics=self.diagnostics)
         candidates: list[tuple[float, int, TunedKernel]] = []
         for i, template in enumerate(templates):
             plan = self.shared_planning(p, template)
@@ -203,7 +247,8 @@ class TemplateTuner:
                 fn = build_stitched_callable(
                     p, row_block=rb, scratch_ops=template.scratch_ops
                 )
-            except StitchInfeasible:
+            except StitchInfeasible as err:
+                self._note_infeasible(p, "build", err)
                 continue
             modeled = self.cost.fused_time(p)
             # tiny grid-utilization nudge: prefer sublane-aligned row blocks
@@ -213,7 +258,8 @@ class TemplateTuner:
             if self.execution_based and sample_inputs is not None:
                 try:
                     measured = self._measure(fn, sample_inputs)
-                except Exception:
+                except Exception as err:
+                    self._note_infeasible(p, "measure", err)
                     continue
             cand = TunedKernel(p, template, plan, modeled, measured, "pallas", fn)
             key = measured if measured is not None else modeled
@@ -246,7 +292,8 @@ class TemplateTuner:
 
         try:
             ana = analyze_pattern(p)
-        except StitchInfeasible:
+        except StitchInfeasible as err:
+            self._note_infeasible(p, "analyze", err)
             return None
         rb = row_block or ana.feasible_blocks[0]
         if rb not in ana.feasible_blocks:
@@ -268,7 +315,8 @@ class TemplateTuner:
         try:
             fn = build_stitched_callable(
                 p, row_block=rb, scratch_ops=template.scratch_ops)
-        except StitchInfeasible:
+        except StitchInfeasible as err:
+            self._note_infeasible(p, "build", err)
             return None
         if not self.validate(p, fn):
             return None

@@ -565,7 +565,8 @@ class StitchedFunction:
         return {"mode": s.mode, "n_kernels": s.n_kernels, "n_ops": s.n_ops,
                 "pallas_groups": s.pallas_groups,
                 "modeled_time": s.modeled_time,
-                "cache_status": s.cache_status}
+                "cache_status": s.cache_status,
+                "verify": getattr(s, "verify", None)}
 
     def land_plans(self, timeout: float | None = None) -> int:
         """Join background compiles and poll EVERY specialization's upgrade
@@ -618,6 +619,11 @@ class StitchedFunction:
             "error": (self._active.error
                       if self._active is not None else None),
             "errors": {},
+            # structured StitchInfeasible records from tuning: why chosen
+            # patterns degraded to fused-jnp (see core.tuner._diagnostic)
+            "diagnostics": (list(self._active.compiled.stats.diagnostics)
+                            if self._active is not None
+                            and self._active.compiled is not None else []),
             "cache": None,
             "service_error": None,
             "measured": ({p: h.summary()

@@ -190,10 +190,19 @@ def metrics_view(path: str) -> list[str]:
 
 
 def main(argv=None):
+    import sys
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if argv and argv[0] == "verify":
+        # `inspect verify ...` delegates to the static verifier CLI:
+        # python -m repro.analysis --cache-dir DIR / --configs [...]
+        from repro.analysis.__main__ import main as verify_main
+        raise SystemExit(verify_main(argv[1:]))
     ap = argparse.ArgumentParser(
         description="inspect stitching observability artifacts offline")
     ap.add_argument("trace", nargs="?", default=None,
-                    help="Chrome-trace JSON written by --trace-out")
+                    help="Chrome-trace JSON written by --trace-out "
+                         "(or the literal 'verify' to run the "
+                         "repro.analysis static verifier)")
     ap.add_argument("--cache-dir", default=None,
                     help="StitchCache directory: print the persisted "
                          "fusion-plan records")

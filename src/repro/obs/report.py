@@ -29,6 +29,10 @@ key                 meaning
 ``errors``          *all* per-key background-compile failures recorded by
                     the :class:`repro.cache.CompilationService`
                     (stringified key -> message; {} when none / no service)
+``diagnostics``     structured ``StitchInfeasible`` records from the active
+                    plan's tuning run (stage / pattern_class / members /
+                    reason dicts) — why chosen patterns degraded to
+                    fused-jnp; [] when none
 ``cache``           the cache report: total/per-bucket/per-placement
                     hits+misses, tier sizes (None without a service)
 ``measured``        measured-kernel timing per path (histogram summaries,
@@ -49,7 +53,8 @@ EXEC_REPORT_SCHEMA = "repro.obs/exec-report@1"
 # keys that must be present in every StitchedFunction.report()
 EXEC_REPORT_KEYS = frozenset({
     "schema", "name", "mode", "status", "calls", "specializations",
-    "placement", "plan", "error", "errors", "cache", "measured",
+    "placement", "plan", "error", "errors", "diagnostics", "cache",
+    "measured",
 })
 
 _CALL_KEYS = frozenset({"stitched", "fallback", "jit"})

@@ -251,7 +251,7 @@ class PackedAdamW:
                    "calls": {"stitched": 0, "fallback": 0, "jit": 0},
                    "specializations": 0, "placement": self.placement,
                    "plan": None, "error": None, "errors": {},
-                   "cache": None, "measured": None}
+                   "diagnostics": [], "cache": None, "measured": None}
         out["status"] = self.status          # "jnp" override when no exec
         out["n_leaves"] = self.layout.n_leaves
         out["rows"] = self.layout.rows

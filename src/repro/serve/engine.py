@@ -76,6 +76,13 @@ class ServeConfig:
     # -- prefill dispatch ------------------------------------------------------
     # live prefill specializations (pow2 buckets x extra-structures), LRU
     prefill_cache_size: int = 8
+    # -- debug -----------------------------------------------------------------
+    # run the repro.analysis KV/refcount audit after every release() and
+    # drain() (paged engines); a leaked or double-owned page raises
+    # VerificationError at the call that created it instead of surfacing
+    # later as pool exhaustion.  Off by default: the audit walks the whole
+    # page pool.
+    debug_kv: bool = False
 
 
 class Engine:
@@ -335,6 +342,26 @@ class Engine:
         self.kv.free(slot)
         self._tok[slot, 0] = 0
         self._occupied.discard(slot)
+        self._debug_audit(f"release(slot={slot})")
+
+    # -- KV conservation audit (repro.analysis pass 4) -------------------------
+    def audit_kv(self) -> list:
+        """Snapshot the page allocator + page table + prefix cache and run
+        the static conservation audit; returns the ``Finding`` list (empty
+        for a healthy pool, or on dense/unbuilt KV where there is nothing
+        to audit)."""
+        if not self.paged or self._kv is None:
+            return []
+        from repro.analysis import audit_kv, snapshot
+        return audit_kv(snapshot(kv=self._kv, prefix=self._prefix))
+
+    def _debug_audit(self, what: str) -> None:
+        if not self.cfg.debug_kv:
+            return
+        from repro.analysis import VerificationError, errors
+        bad = errors(self.audit_kv())
+        if bad:
+            raise VerificationError(f"KV audit after {what}", bad)
 
     @property
     def occupied(self) -> frozenset[int]:
@@ -415,7 +442,9 @@ class Engine:
     def drain(self, max_steps: int | None = None):
         """Step until all submitted requests finish; returns the
         :class:`~repro.serve.queue.FinishedRequest` list in completion order."""
-        return self.scheduler.drain(max_steps=max_steps)
+        out = self.scheduler.drain(max_steps=max_steps)
+        self._debug_audit("drain()")
+        return out
 
     def serve_report(self) -> dict:
         """Aggregate scheduler metrics (empty if continuous mode unused)."""

@@ -1,0 +1,718 @@
+"""repro.analysis mutation suite: each test seeds one defect class into a
+known-good artifact and asserts the verifier reports the exact RA0xx code —
+plus zero-findings checks on clean graphs/plans/configs, the compiler's
+verify= gate, cache-replay demotion, disk corruption handling, tuner
+diagnostics, and the KV conservation audit."""
+
+import json
+
+import numpy as np
+import pytest
+
+from conftest import make_mlp_norm_graph, make_softmax_graph
+
+from repro.analysis import (CODES, Finding, VerificationError, audit_kv,
+                            check_donation, errors, snapshot, summarize,
+                            verify_compiled, verify_graph, verify_plan,
+                            verify_record, warnings_)
+from repro.core import GraphBuilder, OpKind, OpNode
+from repro.core.compiler import StitchCompiler
+
+
+def codes(findings):
+    return {f.code for f in findings}
+
+
+def _chain():
+    """p -> a -> b -> c elementwise chain (cycle/cover fixtures)."""
+    b = GraphBuilder("chain")
+    p = b.param("p", (32, 64))
+    a = b.ew("relu", p)
+    x = b.ew("exp", a)
+    c = b.ew("neg", x)
+    return b.build(outputs=[c]), (a, x, c)
+
+
+# ---------------------------------------------------------------------------
+# pass 1: IR verifier
+# ---------------------------------------------------------------------------
+
+class TestVerifyGraph:
+    def test_clean_graphs_have_no_findings(self):
+        g, _, _ = make_softmax_graph()
+        assert verify_graph(g) == []
+        assert verify_graph(make_mlp_norm_graph()) == []
+
+    def test_ra001_use_before_def(self):
+        g, _, _ = make_softmax_graph()
+        # bypass Graph.add's operand check, as a disk loader would
+        g.nodes["ghostly"] = OpNode("ghostly", OpKind.ELEMENTWISE, (64, 256),
+                                    "float32", ("never_defined",),
+                                    {"op": "relu"})
+        fs = verify_graph(g)
+        assert "RA001" in codes(fs)
+        assert any(f.node == "ghostly" for f in fs)
+
+    def test_ra002_cycle(self):
+        g, (a, x, c) = _chain()
+        g.nodes[a].operands = (c,)          # close the loop a -> x -> c -> a
+        assert "RA002" in codes(verify_graph(g))
+
+    def test_ra003_missing_output(self):
+        g, _, _ = make_softmax_graph()
+        g.outputs.append("not_a_node")
+        assert "RA003" in codes(verify_graph(g))
+
+    def test_ra004_bad_dtype(self):
+        g, _, y = make_softmax_graph()
+        g.nodes[y].dtype = "float1337"
+        assert "RA004" in codes(verify_graph(g))
+
+    def test_ra005_dead_node_is_warning(self):
+        g, _, _ = make_softmax_graph()
+        b = GraphBuilder("x")  # noqa: F841 - naming only
+        g.nodes["orphan"] = OpNode("orphan", OpKind.ELEMENTWISE, (64, 256),
+                                   "float32", ("x",), {"op": "relu"})
+        fs = verify_graph(g)
+        assert "RA005" in codes(fs)
+        assert not errors(fs)               # WARN only
+
+    def test_ra010_elementwise_shape_mismatch(self):
+        g, _, y = make_softmax_graph()
+        g.nodes[y].shape = (64, 128)        # operands say (64, 256)
+        fs = verify_graph(g)
+        assert "RA010" in codes(fs)
+        assert any(f.node == y for f in fs)
+
+    def test_ra011_broadcast_dims(self):
+        g, _, _ = make_softmax_graph()
+        g.nodes["bcast"].attrs["bcast_dims"] = (1,)   # (64,) -> dim 1 of (64,256)
+        assert "RA011" in codes(verify_graph(g))
+
+    def test_ra012_reshape_count(self):
+        b = GraphBuilder("r")
+        x = b.param("x", (8, 8))
+        r = b.reshape(x, (8, 8))
+        g = b.build(outputs=[r])
+        g.nodes[r].shape = (8, 9)
+        assert "RA012" in codes(verify_graph(g))
+
+    def test_ra013_transpose_perm(self):
+        b = GraphBuilder("t")
+        x = b.param("x", (4, 8))
+        t = b.transpose(x, (1, 0))
+        g = b.build(outputs=[t])
+        g.nodes[t].attrs["perm"] = (0, 0)
+        assert "RA013" in codes(verify_graph(g))
+
+    def test_ra014_reduce_axes(self):
+        g, _, _ = make_softmax_graph()
+        g.nodes["reduce_max"].attrs["axes"] = (5,)
+        assert "RA014" in codes(verify_graph(g))
+
+    def test_ra015_dot_dims(self):
+        g = make_mlp_norm_graph()
+        g.nodes["w"].shape = (123, 256)     # contraction extent mismatch
+        assert "RA015" in codes(verify_graph(g))
+
+    def test_ra016_slice_bounds(self):
+        b = GraphBuilder("s")
+        x = b.param("x", (16, 16))
+        s = b.slice_(x, (0, 0), (8, 8))
+        g = b.build(outputs=[s])
+        g.nodes[s].attrs["limits"] = (8, 99)
+        assert "RA016" in codes(verify_graph(g))
+
+    def test_ra017_gather_shape(self):
+        b = GraphBuilder("g")
+        t = b.param("table", (100, 32))
+        ix = b.param("ix", (4, 7), dtype="int32")
+        ga = b.gather(t, ix)
+        g = b.build(outputs=[ga])
+        g.nodes[ga].shape = (4, 7, 31)
+        assert "RA017" in codes(verify_graph(g))
+
+
+# ---------------------------------------------------------------------------
+# pass 2: plan verifier
+# ---------------------------------------------------------------------------
+
+class TestVerifyPlan:
+    def test_clean_full_cover(self):
+        g, _, _ = make_softmax_graph()
+        members = frozenset(n.name for n in g.compute_nodes())
+        assert verify_plan(g, [members], require_cover=True) == []
+
+    def test_ra020_member_not_in_graph(self):
+        g, _, _ = make_softmax_graph()
+        fs = verify_plan(g, [frozenset({"reduce_max", "no_such_node"})])
+        assert "RA020" in codes(fs)
+
+    def test_ra021_overlapping_groups(self):
+        g, _, _ = make_softmax_graph()
+        fs = verify_plan(g, [frozenset({"reduce_max", "bcast"}),
+                             frozenset({"bcast", "sub"})])
+        assert "RA021" in codes(fs)
+        assert any(f.node == "bcast" for f in fs)
+
+    def test_ra022_uncovered_requires_cover(self):
+        g, _, _ = make_softmax_graph()
+        fs = verify_plan(g, [frozenset({"reduce_max"})], require_cover=True)
+        assert "RA022" in codes(fs)
+        # ...but the compiler's pre-tune call tolerates partial plans
+        assert "RA022" not in codes(verify_plan(g, [frozenset({"reduce_max"})]))
+
+    def test_ra023_induced_cycle(self):
+        g, (a, x, c) = _chain()
+        fs = verify_plan(g, [frozenset({a, c}), frozenset({x})])
+        assert "RA023" in codes(fs)
+
+    def test_ra023_cycle_through_uncovered_singleton(self):
+        # the middle node is NOT in any group: it still executes as an
+        # implicit singleton kernel, so the cycle must be caught pre-cover
+        g, (a, x, c) = _chain()
+        fs = verify_plan(g, [frozenset({a, c})])
+        assert "RA023" in codes(fs)
+
+    def test_ra024_scratch_over_budget(self):
+        g, _, _ = make_softmax_graph()
+        c = StitchCompiler(use_pallas=False)
+        members = frozenset(n.name for n in g.compute_nodes())
+        from repro.core.pattern import FusionPattern
+        req = sum(c.cost.scratch_request(FusionPattern(g, members)).values())
+        assert req > 0                       # fixture sanity
+        fs = verify_plan(g, [members], scratch_budget=req - 1, cost=c.cost)
+        assert "RA024" in codes(fs)
+        assert verify_plan(g, [members], scratch_budget=req, cost=c.cost) == []
+
+    def test_ra025_unregistered_custom_in_fused_group(self):
+        b = GraphBuilder("c")
+        x = b.param("x", (32, 64))
+        cu = b.custom("mystery", (32, 64), "float32", (x,),
+                      kernel="definitely_not_registered")
+        y = b.ew("relu", cu)
+        g = b.build(outputs=[y])
+        fs = verify_plan(g, [frozenset({cu, y})])
+        assert "RA025" in codes(fs)
+        # a singleton custom group is fine: nothing is stitched around it
+        assert "RA025" not in codes(verify_plan(g, [frozenset({cu})]))
+
+    def test_ra027_source_node_in_group(self):
+        g, x, _ = make_softmax_graph()
+        fs = verify_plan(g, [frozenset({x, "reduce_max"})])
+        assert "RA027" in codes(fs)
+
+
+# ---------------------------------------------------------------------------
+# pass 3: donation/aliasing
+# ---------------------------------------------------------------------------
+
+class TestCheckDonation:
+    def test_clean(self):
+        # under the whole-graph fused plan, x's two readers share one group
+        g, x, _ = make_softmax_graph()
+        members = frozenset(n.name for n in g.compute_nodes())
+        assert check_donation(g, [x], groups=[members]) == []
+
+    def test_ra030_donated_aliases_output(self):
+        g, x, _ = make_softmax_graph()
+        g.mark_output(x)
+        fs = check_donation(g, [x])
+        assert "RA030" in codes(fs)
+
+    def test_ra031_donated_read_after_donating_group(self):
+        b = GraphBuilder("d")
+        x = b.param("x", (8, 8))
+        a = b.ew("relu", x)
+        e = b.ew("exp", a)
+        c = b.ew("add", x, e)               # second read of x, 2 groups later
+        g = b.build(outputs=[c])
+        fs = check_donation(g, [x])
+        assert "RA031" in codes(fs)
+        # under a plan that fuses both readers into one group, it's safe
+        assert check_donation(g, [x], groups=[frozenset({a, e, c})]) == []
+
+    def test_ra032_unknown_or_unread_donation_warns(self):
+        g, _, _ = make_softmax_graph()
+        fs = check_donation(g, ["not_an_input"])
+        assert codes(fs) == {"RA032"}
+        assert not errors(fs)
+
+
+# ---------------------------------------------------------------------------
+# pass 4: KV/refcount audit
+# ---------------------------------------------------------------------------
+
+class TestKVAudit:
+    def _clean_snap(self):
+        from repro.analysis import KVSnapshot
+        return KVSnapshot(num_pages=5, free=[4, 3], refs={1: 1, 2: 1},
+                          slot_pages=[[1, 2]], table=[[1, 2, 0]],
+                          slot_lengths=[20], page_size=16)
+
+    def test_clean(self):
+        assert audit_kv(self._clean_snap()) == []
+
+    def test_ra043_leaked_page(self):
+        snap = self._clean_snap()
+        snap.free = [4]
+        snap.refs[3] = 1                    # refcounted, owned by nobody
+        fs = audit_kv(snap)
+        assert codes(fs) == {"RA043"}
+        assert fs[0].page == 3
+
+    def test_ra044_double_owned(self):
+        snap = self._clean_snap()
+        snap.slot_pages = [[1, 2], [1]]     # slot 1 also claims page 1
+        snap.table = None
+        fs = audit_kv(snap)
+        assert "RA044" in codes(fs)
+
+    def test_ra041_free_and_allocated(self):
+        snap = self._clean_snap()
+        snap.free = [4, 3, 2]               # page 2 also refcounted
+        assert "RA041" in codes(audit_kv(snap))
+
+    def test_ra046_owned_but_free(self):
+        snap = self._clean_snap()
+        del snap.refs[2]
+        snap.free = [4, 3, 2]               # slot still points at page 2
+        fs = audit_kv(snap)
+        assert "RA046" in codes(fs)
+
+    def test_ra040_lost_page(self):
+        snap = self._clean_snap()
+        snap.free = [4]                     # page 3 vanished entirely
+        assert "RA040" in codes(audit_kv(snap))
+
+    def test_ra047_table_row_mismatch(self):
+        snap = self._clean_snap()
+        snap.table = [[2, 1, 0]]            # order flipped vs slot_pages
+        assert "RA047" in codes(audit_kv(snap))
+
+    def test_live_allocator_roundtrip(self):
+        from repro.serve.kv import PageAllocator
+        alloc = PageAllocator(8)
+        pages = alloc.alloc(3)
+        assert audit_kv(snapshot(allocator=alloc)) == []  # bare allocator
+        alloc.free(pages[:1])
+        assert audit_kv(snapshot(allocator=alloc)) == []
+        # seed a leak: refcount with no free-list entry survives
+        alloc._refs[pages[0]] = 1
+        fs = audit_kv(snapshot(allocator=alloc))
+        assert "RA041" in codes(fs)         # freed page now also refcounted
+
+    def test_live_paged_engine_audit(self):
+        jax = pytest.importorskip("jax")
+        from repro.configs import get_reduced
+        from repro.models import build_model
+        from repro.serve import Engine, ServeConfig
+
+        cfg = get_reduced("qwen3_1_7b")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        eng = Engine(model, params,
+                     ServeConfig(batch=2, max_len=32, debug_kv=True))
+        assert eng.paged
+        rng = np.random.default_rng(0)
+        px = eng.prefill(rng.integers(0, cfg.vocab, (1, 8)))
+        eng.insert(px, slot=0)
+        eng.generate_step(steps=2)
+        assert eng.audit_kv() == []
+        eng.release(0)                      # debug_kv audits here
+        assert eng.audit_kv() == []
+        # seed a leak and watch release() trip the debug audit
+        px2 = eng.prefill(rng.integers(0, cfg.vocab, (1, 8)))
+        eng.insert(px2, slot=1)
+        leaked = eng.kv.allocator.alloc(1)  # refcounted, no owner
+        with pytest.raises(VerificationError) as ei:
+            eng.release(1)
+        assert "RA043" in ei.value.codes
+        assert leaked[0] in {f.page for f in ei.value.findings}
+
+
+# ---------------------------------------------------------------------------
+# compiler gate
+# ---------------------------------------------------------------------------
+
+class TestCompilerGate:
+    def test_clean_compile_records_summary(self):
+        g, _, _ = make_softmax_graph()
+        cg = StitchCompiler(use_pallas=False).compile(g)
+        assert cg.stats.verify == {"errors": 0, "warnings": 0, "codes": []}
+        assert cg.stats.verify_seconds > 0
+
+    def test_verify_off_skips(self):
+        g, _, _ = make_softmax_graph()
+        cg = StitchCompiler(use_pallas=False, verify="off").compile(g)
+        assert cg.stats.verify is None
+        assert cg.stats.verify_seconds == 0.0
+
+    def test_rejects_overlapping_plan(self):
+        g, _, _ = make_softmax_graph()
+        c = StitchCompiler(use_pallas=False)
+        from repro.core.pattern import FusionPattern
+        bad = [FusionPattern(g, {"reduce_max", "bcast"}),
+               FusionPattern(g, {"bcast", "sub"})]
+        c.plan = lambda graph: (bad, None)
+        with pytest.raises(VerificationError) as ei:
+            c.compile(g)
+        assert "RA021" in ei.value.codes
+
+    def test_rejects_cyclic_plan(self):
+        g, (a, x, c_) = _chain()
+        c = StitchCompiler(use_pallas=False)
+        from repro.core.pattern import FusionPattern
+        c.plan = lambda graph: ([FusionPattern(g, {a, c_})], None)
+        with pytest.raises(VerificationError) as ei:
+            c.compile(g)
+        assert "RA023" in ei.value.codes
+
+    def test_full_mode_rejects_bad_graph(self):
+        g, _, y = make_softmax_graph()
+        g.nodes[y].shape = (64, 128)
+        c = StitchCompiler(use_pallas=False, verify="full")
+        with pytest.raises(VerificationError) as ei:
+            c.compile(g)
+        assert "RA010" in ei.value.codes
+        # plans-level verification does not inspect node shapes
+        assert StitchCompiler(use_pallas=False).compile(g) is not None
+
+    def test_every_mode_verifies_clean(self):
+        g = make_mlp_norm_graph()
+        for mode in ("off", "xla", "stitch"):
+            cg = StitchCompiler(mode=mode, use_pallas=False,
+                                verify="full").compile(g)
+            assert cg.stats.verify["errors"] == 0
+
+
+# ---------------------------------------------------------------------------
+# disk records: corruption + replay verification
+# ---------------------------------------------------------------------------
+
+def _cached_compile(tmp_path, g):
+    from repro.cache import StitchCache
+    cache = StitchCache(directory=str(tmp_path))
+    comp = StitchCompiler(use_pallas=False, cache=cache)
+    cg = comp.compile(g)
+    files = sorted(tmp_path.glob("plan_*.json"))
+    assert len(files) == 1
+    return cache, comp, cg, files[0]
+
+
+class TestDiskRecords:
+    @pytest.mark.parametrize("poison", [
+        "truncate", "garbage", "wrong_type", "bad_body"])
+    def test_corrupt_record_is_a_miss_with_one_warning(self, tmp_path, poison):
+        from repro.cache import StitchCache
+        g, _, _ = make_softmax_graph()
+        _, _, cg_cold, path = _cached_compile(tmp_path, g)
+        text = path.read_text()
+        if poison == "truncate":
+            path.write_text(text[: len(text) // 2])
+        elif poison == "garbage":
+            path.write_text("not json at all {{{")
+        elif poison == "wrong_type":
+            path.write_text("[1, 2, 3]")
+        else:
+            d = json.loads(text)
+            d["groups"] = "oops"            # right version, wrong-typed body
+            path.write_text(json.dumps(d))
+        cache2 = StitchCache(directory=str(tmp_path))
+        comp2 = StitchCompiler(use_pallas=False, cache=cache2)
+        with pytest.warns(RuntimeWarning, match="corrupt plan record"):
+            cg = comp2.compile(g)           # never raises into the compile
+        assert cg.stats.cache_status == "miss"
+        assert cg.stats.n_kernels == cg_cold.stats.n_kernels
+        assert cache2.store.disk.corrupt_reads == 1
+        rep = cache2.report()
+        assert rep["total_corrupt"] == 1
+        assert rep["disk_corrupt_reads"] == 1
+        # the recompile overwrote the bad file: fresh cache now hits cleanly
+        from repro.cache import StitchCache as SC
+        cache3 = SC(directory=str(tmp_path))
+        comp3 = StitchCompiler(use_pallas=False, cache=cache3)
+        assert comp3.compile(g).stats.cache_status == "hit"
+        assert cache3.store.disk.corrupt_reads == 0
+
+    def test_stale_version_is_a_silent_miss(self, tmp_path):
+        g, _, _ = make_softmax_graph()
+        from repro.cache import StitchCache
+        _, _, _, path = _cached_compile(tmp_path, g)
+        d = json.loads(path.read_text())
+        d["v"] = 1
+        path.write_text(json.dumps(d))
+        cache2 = StitchCache(directory=str(tmp_path))
+        comp2 = StitchCompiler(use_pallas=False, cache=cache2)
+        import warnings as w
+        with w.catch_warnings():
+            w.simplefilter("error")         # any warning fails the test
+            assert comp2.compile(g).stats.cache_status == "miss"
+        assert cache2.store.disk.corrupt_reads == 0
+
+    def test_replay_verification_demotes_illegal_record(self, tmp_path):
+        from repro.cache import StitchCache
+        g, _, _ = make_softmax_graph()
+        _, _, _, path = _cached_compile(tmp_path, g)
+        d = json.loads(path.read_text())
+        # valid JSON, valid key, illegal plan: duplicate the first group
+        d["groups"].append(dict(d["groups"][0]))
+        path.write_text(json.dumps(d))
+        cache2 = StitchCache(directory=str(tmp_path))
+        comp2 = StitchCompiler(use_pallas=False, cache=cache2)
+        with pytest.warns(RuntimeWarning, match="failed static verification"):
+            cg = comp2.compile(g)
+        assert cg.stats.cache_status == "miss"
+        rep = cache2.report()
+        assert rep["total_demoted"] == 1
+        assert rep["total_corrupt"] == 0
+
+    def test_verify_off_skips_replay_verification(self, tmp_path):
+        from repro.cache import StitchCache
+        g, _, _ = make_softmax_graph()
+        _, _, _, path = _cached_compile(tmp_path, g)
+        d = json.loads(path.read_text())
+        d["groups"].append(dict(d["groups"][0]))
+        path.write_text(json.dumps(d))
+        cache2 = StitchCache(directory=str(tmp_path))
+        comp2 = StitchCompiler(use_pallas=False, cache=cache2, verify="off")
+        cg = comp2.compile(g)               # replays the overlapping plan
+        assert cache2.report()["total_demoted"] == 0
+        assert cg is not None
+
+    def test_clean_replay_verifies_with_zero_findings(self, tmp_path):
+        from repro.cache import StitchCache
+        from repro.cache.signature import compute_signature
+        g, _, _ = make_softmax_graph()
+        _, comp, _, _ = _cached_compile(tmp_path, g)
+        cache2 = StitchCache(directory=str(tmp_path))
+        comp2 = StitchCompiler(use_pallas=False, cache=cache2)
+        sig = compute_signature(g)
+        key = cache2.key_for(sig, "stitch", comp2.hw.name, "",
+                             __import__("repro.cache.signature",
+                                        fromlist=["config_key"]
+                                        ).config_key(comp2.gen_cfg))
+        rec = cache2.store.get(key)
+        assert rec is not None
+        budget = comp2.gen_cfg.scratch_budget or comp2.hw.onchip_budget
+        fs = verify_record(g, sig.canon_order, rec,
+                           scratch_budget=budget, cost=comp2.cost)
+        assert fs == []
+        assert comp2.compile(g).stats.cache_status == "hit"
+        assert cache2.report()["total_demoted"] == 0
+
+    def test_ra050_node_count_mismatch(self):
+        g, _, _ = make_softmax_graph()
+        from repro.cache.store import GroupRecord, PlanRecord
+        rec = PlanRecord(graph_key="x", bucket_key="y", shape_key="z",
+                         mode="stitch", hw="tpu", n_nodes=99,
+                         groups=(GroupRecord((0, 1), "jnp"),))
+        fs = verify_record(g, [n for n in g.nodes], rec)
+        assert codes(fs) == {"RA050"}
+
+    def test_ra028_bad_group_kind(self):
+        g, _, _ = make_softmax_graph()
+        from repro.cache.store import GroupRecord, PlanRecord
+        names = list(g.nodes)
+        rec = PlanRecord(graph_key="x", bucket_key="y", shape_key="z",
+                         mode="stitch", hw="tpu", n_nodes=len(names),
+                         groups=(GroupRecord((0,), "frobnicate"),))
+        assert "RA028" in codes(verify_record(g, names, rec))
+
+
+# ---------------------------------------------------------------------------
+# tuner diagnostics (the former silent StitchInfeasible swallows)
+# ---------------------------------------------------------------------------
+
+class TestTunerDiagnostics:
+    def _infeasible_pattern(self):
+        # square shape: rows=64 is the only candidate row dimension, and
+        # under it the transpose moves the row axis -> always infeasible
+        b = GraphBuilder("t")
+        x = b.param("x", (64, 64))
+        t = b.transpose(x, (1, 0))
+        y = b.ew("relu", t)
+        g = b.build(outputs=[y])
+        from repro.core.pattern import FusionPattern
+        return g, FusionPattern(g, {t, y})
+
+    def test_tune_records_reason(self):
+        from repro.core.tuner import TemplateTuner
+        _, p = self._infeasible_pattern()
+        tuner = TemplateTuner()
+        assert tuner.tune(p) is None
+        assert len(tuner.diagnostics) == 1
+        d = tuner.diagnostics[0]
+        assert d["stage"] == "analyze"
+        assert "row axis" in d["reason"]
+        assert d["n_members"] == 2
+
+    def test_instantiate_records_reason(self):
+        from repro.core.tuner import TemplateTuner
+        _, p = self._infeasible_pattern()
+        tuner = TemplateTuner()
+        assert tuner.instantiate(p) is None
+        assert tuner.diagnostics and tuner.diagnostics[0]["stage"] == "analyze"
+
+    def test_diagnostics_flow_into_stats_and_report(self):
+        g, p = self._infeasible_pattern()
+        c = StitchCompiler()                # use_pallas=True: tuning runs
+        c.plan = lambda graph: ([p], None)
+        cg = c.compile(g)
+        assert cg.stats.diagnostics, "infeasible pattern left no diagnostic"
+        assert cg.stats.diagnostics[0]["stage"] == "analyze"
+        # and the group degraded to fused-jnp, numerics preserved
+        assert all(grp.kind != "pallas" for grp in cg.groups)
+
+    def test_diagnostics_bounded(self):
+        from repro.core.tuner import TemplateTuner
+        _, p = self._infeasible_pattern()
+        tuner = TemplateTuner()
+        tuner.MAX_DIAGNOSTICS = 10
+        for _ in range(25):
+            tuner.instantiate(p)
+        assert len(tuner.diagnostics) == 10
+
+    def test_stitched_function_report_has_diagnostics_key(self):
+        jax = pytest.importorskip("jax")
+        import jax.numpy as jnp
+        from repro.exec import stitch
+
+        @stitch
+        def f(a):
+            return jnp.tanh(a) * 2.0
+
+        f(jnp.ones((8, 8)))
+        rep = f.report()
+        assert isinstance(rep["diagnostics"], list)
+        from repro.obs import validate_exec_report
+        assert validate_exec_report(rep) == []
+
+
+# ---------------------------------------------------------------------------
+# zero findings on every bundled config (the acceptance sweep)
+# ---------------------------------------------------------------------------
+
+def _arch_names():
+    from repro.configs import ARCHS
+    return list(ARCHS)
+
+
+@pytest.mark.parametrize("arch", _arch_names())
+def test_bundled_config_verifies_clean(arch):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_reduced
+    from repro.core.trace import trace_to_graph
+    from repro.models import build_model
+
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.zeros((2, cfg.n_patch_tokens, cfg.d_model),
+                                          cfg.dtype)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(rng.standard_normal((2, 32, cfg.d_model)),
+                                      cfg.dtype)
+    # full (loss, metrics) output — loss-only tracing leaves the metrics'
+    # nodes dead, which the IR pass correctly flags as RA005 warnings
+    g, _ = trace_to_graph(lambda p: model.train_forward(p, batch),
+                          params, name=arch)
+    comp = StitchCompiler(use_pallas=False)   # verify="plans" gates compile
+    cg = comp.compile(g)
+    assert cg.stats.verify["errors"] == 0
+    budget = comp.gen_cfg.scratch_budget
+    if budget is None:
+        budget = comp.hw.onchip_budget
+    fs = verify_compiled(cg, scratch_budget=budget, cost=comp.cost)
+    assert fs == [], summarize(fs)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+class TestCLI:
+    def test_cache_dir_audit(self, tmp_path):
+        from repro.analysis.__main__ import audit_cache_dir, main
+        g, _, _ = make_softmax_graph()
+        _cached_compile(tmp_path, g)
+        (tmp_path / "plan_dead.json").write_text("{broken")
+        results = audit_cache_dir(str(tmp_path))
+        assert len(results) == 2
+        bad = results["plan_dead.json"]
+        assert codes(bad) == {"RA050"}
+        good = [fs for name, fs in results.items() if name != "plan_dead.json"]
+        assert good == [[]]
+        assert main(["--cache-dir", str(tmp_path)]) == 1
+        (tmp_path / "plan_dead.json").unlink()
+        assert main(["--cache-dir", str(tmp_path)]) == 0
+
+    def test_json_output(self, tmp_path, capsys):
+        from repro.analysis.__main__ import main
+        g, _, _ = make_softmax_graph()
+        _cached_compile(tmp_path, g)
+        assert main(["--cache-dir", str(tmp_path), "--json"]) == 0
+        doc = json.loads(capsys.readouterr().out)
+        assert doc["summary"] == {"errors": 0, "warnings": 0, "codes": []}
+
+    def test_inspect_verify_delegates(self, tmp_path, capsys):
+        from repro.launch.inspect import main as inspect_main
+        g, _, _ = make_softmax_graph()
+        _cached_compile(tmp_path, g)
+        with pytest.raises(SystemExit) as ei:
+            inspect_main(["verify", "--cache-dir", str(tmp_path)])
+        assert ei.value.code == 0
+        assert "clean" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# findings plumbing
+# ---------------------------------------------------------------------------
+
+def test_analysis_imports_without_jax(tmp_path):
+    """The package contract: the verifier and the cache-record audit run in
+    a process where any jax import raises."""
+    import subprocess
+    import sys
+    g, _, _ = make_softmax_graph()
+    _cached_compile(tmp_path, g)
+    script = (
+        "import sys\n"
+        "sys.modules['jax'] = None\n"
+        "from repro.analysis import audit_kv, verify_graph, verify_plan\n"
+        "from repro.analysis.__main__ import main\n"
+        f"raise SystemExit(main(['--cache-dir', {str(tmp_path)!r}]))\n")
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True,
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin"},
+                          cwd="/root/repo")
+    assert proc.returncode == 0, proc.stderr
+    assert "1/1 clean" in proc.stdout
+
+
+class TestFindings:
+    def test_every_code_documented(self):
+        for code in CODES:
+            assert code.startswith("RA") and len(code) == 5
+
+    def test_severity_derivation(self):
+        assert Finding("RA005", "x").severity == "warning"
+        assert Finding("RA021", "x").severity == "error"
+
+    def test_summarize_and_filters(self):
+        fs = [Finding("RA005", "dead"), Finding("RA021", "dup", group=1)]
+        assert summarize(fs) == {"errors": 1, "warnings": 1,
+                                 "codes": ["RA005", "RA021"]}
+        assert [f.code for f in errors(fs)] == ["RA021"]
+        assert [f.code for f in warnings_(fs)] == ["RA005"]
+
+    def test_verification_error_carries_findings(self):
+        err = VerificationError("nope", [Finding("RA021", "dup")])
+        assert err.codes == {"RA021"}
+        assert "RA021" in str(err)
