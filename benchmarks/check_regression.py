@@ -29,6 +29,10 @@ Gated sections:
   on different hardware without loosening the deterministic gates.  The
   prefix-heavy sub-run adds two liveness gates (positive): the
   prefix-cache hit rate and the stitched-prefill kernel count;
+* **packing** — horizontal FFD packing on the wide-expert MoE block:
+  packed-plan kernel count (lower), packs formed / subgraphs packed
+  (positive liveness — a zero means the packer silently stopped
+  engaging), and the packed-vs-unpacked kernel-reduction ratio (higher);
 * **verify** — the static verifier's total ERROR findings across workload
   plans (``max:0`` — any finding on a healthy build is a verifier or
   compiler bug) and its worst in-compile overhead fraction (``max:0.05``);
@@ -88,6 +92,17 @@ COMPUTE_METRICS = (
     (("block_fn", "pallas_groups"), "block_fn_pallas_groups", "positive"),
     (("decode", "n_kernels"), "decode_kernels", "lower"),
     (("decode", "pallas_groups"), "decode_pallas_groups", "positive"),
+)
+
+# json paths inside the top-level "packing" section — horizontal FFD
+# packing on the wide-expert MoE block.  Deterministic: the packed plan's
+# kernel count must not grow and the packer must actually form packs (a
+# zero means horizontal packing silently stopped engaging).
+PACKING_METRICS = (
+    (("packed", "n_kernels"), "packed_kernels", "lower"),
+    (("packed", "packs"), "packs_formed", "positive"),
+    (("packed", "packed_subgraphs"), "packed_subgraphs", "positive"),
+    (("kernel_reduction",), "pack_kernel_reduction", "higher"),
 )
 
 # The "measured" section is schema-checked, not value-gated: interpret-mode
@@ -229,6 +244,8 @@ def compare(baseline: dict, candidate: dict, tolerance: float = TOLERANCE,
     _gate_section(baseline, candidate, "verify", VERIFY_METRICS,
                   tolerance, failures, lines)
     _gate_section(baseline, candidate, "compute_stitching", COMPUTE_METRICS,
+                  tolerance, failures, lines)
+    _gate_section(baseline, candidate, "packing", PACKING_METRICS,
                   tolerance, failures, lines)
     check_measured_schema(baseline, candidate, failures, lines)
     return failures, lines

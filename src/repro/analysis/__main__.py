@@ -12,8 +12,10 @@
 Exit code 1 when any ERROR finding is emitted, 0 otherwise (WARNs don't
 fail the run) — CI gates on this.  The cache-dir audit is zero-jax: it
 checks record *structure* (readable JSON, known group kinds, in-range
-canonical indices, disjoint members) without a live graph; the full
-graph-vs-record check runs online at replay (:meth:`StitchCache.lookup`).
+canonical indices, disjoint members, well-formed pack provenance —
+disjoint, covering, >= 2 member subgraphs) without a live graph; the full
+graph-vs-record check (including the RA061 pack-dependence pass) runs
+online at replay (:meth:`StitchCache.lookup`).
 The config audit imports jax: it traces each reduced config's train
 forward, compiles it, and runs :func:`verify_compiled`.
 """
@@ -75,6 +77,36 @@ def _audit_record_structure(rec) -> list[Finding]:
                              f"{owner[j]} and {i}", group=i))
             elif isinstance(j, int):
                 owner[j] = i
+        findings += _audit_record_pack(gr, i, rec.n_nodes)
+    return findings
+
+
+def _audit_record_pack(gr, i: int, n_nodes: int) -> list[Finding]:
+    """Graph-free pack-provenance checks on one group record: canonical
+    indices in range (RA020), member subgraphs disjoint and covering the
+    group with >= 2 subgraphs (RA060).  The cross-subgraph dependence
+    check (RA061) needs the live graph and runs at replay."""
+    pack = getattr(gr, "pack", None)
+    if not pack:
+        return []
+    findings: list[Finding] = []
+    flat = [j for gset in pack for j in gset]
+    bad = [j for j in flat if not isinstance(j, int) or not 0 <= j < n_nodes]
+    if bad:
+        return [Finding("RA020", f"pack canonical indices {bad[:6]} out of "
+                                 f"range [0, {n_nodes})", group=i)]
+    if len(pack) < 2:
+        findings.append(Finding(
+            "RA060", f"pack has {len(pack)} member subgraph(s); needs >= 2",
+            group=i))
+    if len(set(flat)) != len(flat):
+        findings.append(Finding(
+            "RA060", "pack member subgraphs overlap", group=i))
+    if set(flat) != {j for j in gr.members if isinstance(j, int)}:
+        findings.append(Finding(
+            "RA060", f"pack member subgraphs do not cover the group "
+                     f"({len(set(flat))} packed vs {len(gr.members)} "
+                     f"members)", group=i))
     return findings
 
 

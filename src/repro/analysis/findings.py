@@ -46,6 +46,9 @@ RA045     allocator structure corrupt (free-list dup / page 0 / range)
 RA046     page owned but not allocated (use-after-free)
 RA047     page-table row disagrees with slot ownership
 RA050     plan record file unreadable / structurally invalid
+RA060     pack member subgraphs overlap / don't cover the group
+RA061     pack data dependence crosses member subgraphs
+RA062     pack register pressure exceeds budget
 ========  =======================================================
 """
 
@@ -94,6 +97,9 @@ CODES: dict[str, str] = {
     "RA046": "page owned but not allocated",
     "RA047": "page-table row inconsistent",
     "RA050": "unreadable plan record",
+    "RA060": "pack member subgraphs malformed",
+    "RA061": "pack dependence crosses member subgraphs",
+    "RA062": "pack register pressure over budget",
 }
 
 _WARN_CODES = frozenset({"RA005", "RA026", "RA032"})

@@ -13,7 +13,10 @@ invariants statically:
   than one contraction at a time,
 * multi-member groups fit the on-chip scratch budget (RA024),
 * fused groups only contain CUSTOM kernels the registry knows (RA025),
-* recorded pattern-class stats match a recount (RA026, WARN).
+* recorded pattern-class stats match a recount (RA026, WARN),
+* horizontal packs are well-formed: member subgraphs disjoint and covering
+  (RA060), no data dependence crosses two packed subgraphs (RA061), and
+  the pack fits the register/live-value budget (RA062).
 
 ``verify_record`` adapts a disk ``PlanRecord`` (canonical indices) onto
 the live graph and runs the same checks — the cache-replay gate.
@@ -36,17 +39,20 @@ _RECORD_KINDS = ("pallas", "jnp", "op")
 
 
 class GroupView:
-    """Minimal adapter one plan group: a member set and an execution kind
+    """Minimal adapter one plan group: a member set, an execution kind
     (``pallas``/``jnp``/``op`` from artifacts and records, ``pattern`` for
-    not-yet-tuned ILP choices)."""
+    not-yet-tuned ILP choices), and — for horizontal packs — the packed
+    member subgraphs (``pack``, None for ordinary groups)."""
 
-    __slots__ = ("members", "kind", "index")
+    __slots__ = ("members", "kind", "index", "pack")
 
     def __init__(self, members: Iterable[str], kind: str = "pattern",
-                 index: int = 0):
+                 index: int = 0,
+                 pack: "tuple[frozenset[str], ...] | None" = None):
         self.members = frozenset(members)
         self.kind = kind
         self.index = index
+        self.pack = pack
 
 
 def _as_views(groups: Sequence) -> list[GroupView]:
@@ -57,9 +63,13 @@ def _as_views(groups: Sequence) -> list[GroupView]:
             views.append(grp)
         elif isinstance(grp, (frozenset, set, list, tuple)):
             views.append(GroupView(grp, "pattern", i))
-        else:  # duck-typed _Group / FusionPattern
+        else:  # duck-typed _Group / FusionPattern / PackPattern
             kind = getattr(grp, "kind", "pattern")
-            views.append(GroupView(grp.members, kind, i))
+            pack = (getattr(grp, "pack", None)
+                    or getattr(grp, "member_groups", None))
+            if pack:
+                pack = tuple(frozenset(gset) for gset in pack)
+            views.append(GroupView(grp.members, kind, i, pack or None))
     return views
 
 
@@ -70,14 +80,17 @@ def verify_plan(
     require_cover: bool = False,
     scratch_budget: int | None = None,
     cost: CostModel | None = None,
+    reg_budget: int | None = None,
     pattern_classes: dict[str, int] | None = None,
 ) -> list[Finding]:
     """Check plan legality; ``groups`` accepts member sets, patterns,
     ``_Group``-likes or :class:`GroupView` s.  ``scratch_budget`` (with a
     ``cost`` model) enables the RA024 budget check for fusable groups;
-    ``require_cover`` additionally demands a full disjoint cover of the
-    graph's compute nodes (records / compiled artifacts — the compiler's
-    pre-tune call leaves uncovered nodes to implicit singletons)."""
+    ``reg_budget`` (with ``cost``) enables the RA062 register-pressure
+    check for packed groups; ``require_cover`` additionally demands a full
+    disjoint cover of the graph's compute nodes (records / compiled
+    artifacts — the compiler's pre-tune call leaves uncovered nodes to
+    implicit singletons)."""
     findings: list[Finding] = []
     views = _as_views(groups)
     compute = {n.name for n in g.compute_nodes()}
@@ -175,6 +188,55 @@ def verify_plan(
                     "RA024", f"scratch request {req} B exceeds budget "
                              f"{scratch_budget} B", group=v.index))
 
+    # -- horizontal packs: provenance well-formed + truly independent ------
+    for v in sane:
+        if not v.pack:
+            continue
+        seen_pack: set[str] = set()
+        union: set[str] = set()
+        bad_pack = False
+        for grp in v.pack:
+            if grp & seen_pack:
+                findings.append(Finding(
+                    "RA060", f"pack member subgraphs overlap on "
+                             f"{sorted(grp & seen_pack)[:4]}", group=v.index))
+                bad_pack = True
+            seen_pack |= grp
+            union |= grp
+        if union != v.members:
+            findings.append(Finding(
+                "RA060", "pack member subgraphs do not cover the group "
+                         f"({len(union)} packed vs {len(v.members)} members)",
+                group=v.index))
+            bad_pack = True
+        if bad_pack:
+            continue
+        owner_grp: dict[str, int] = {}
+        for gi, grp in enumerate(v.pack):
+            for m in grp:
+                owner_grp[m] = gi
+        for m in sorted(v.members):
+            if m not in g.nodes:
+                continue
+            for o in g.nodes[m].operands:
+                if o in owner_grp and owner_grp[o] != owner_grp[m]:
+                    findings.append(Finding(
+                        "RA061", f"pack dependence crosses member subgraphs: "
+                                 f"{o!r} (subgraph {owner_grp[o]}) feeds "
+                                 f"{m!r} (subgraph {owner_grp[m]})",
+                        node=m, group=v.index))
+        if reg_budget is not None and cost is not None \
+                and all(m in g.nodes for m in v.members):
+            # pack-aware pressure: independent subgraphs serialise inside a
+            # block, so the widest member subgraph sets the working set
+            # (mirrors CostModel.register_pressure on a PackPattern)
+            reg = max(cost.register_pressure(FusionPattern(g, grp))
+                      for grp in v.pack)
+            if reg > reg_budget:
+                findings.append(Finding(
+                    "RA062", f"pack register pressure {reg} B exceeds "
+                             f"budget {reg_budget} B", group=v.index))
+
     # -- recorded pattern-class stats vs a recount (WARN) ------------------
     if pattern_classes is not None:
         recount: dict[str, int] = {}
@@ -200,6 +262,7 @@ def verify_record(
     *,
     scratch_budget: int | None = None,
     cost: CostModel | None = None,
+    reg_budget: int | None = None,
 ) -> list[Finding]:
     """Verify a disk ``PlanRecord`` against the *live* graph it is about
     to replay onto.  ``canon_order`` maps the record's canonical node
@@ -218,23 +281,29 @@ def verify_record(
                 "RA028", f"group kind {gr.kind!r} not one of "
                          f"{_RECORD_KINDS}", group=i))
             continue
-        bad = [j for j in list(gr.members) + list(gr.scratch or [])
+        pack_idx = [list(gset) for gset in (getattr(gr, "pack", ()) or ())]
+        flat_pack = [j for gset in pack_idx for j in gset]
+        bad = [j for j in list(gr.members) + list(gr.scratch or []) + flat_pack
                if not isinstance(j, int) or not 0 <= j < n]
         if bad:
             findings.append(Finding(
                 "RA020", f"canonical indices {bad[:6]} out of range "
                          f"[0, {n})", group=i))
             continue
+        pack = (tuple(frozenset(canon_order[j] for j in gset)
+                      for gset in pack_idx) or None)
         views.append(GroupView((canon_order[j] for j in gr.members),
-                               gr.kind, i))
+                               gr.kind, i, pack))
     if not any(f.severity == "error" for f in findings):
         findings += verify_plan(g, views, require_cover=True,
-                                scratch_budget=scratch_budget, cost=cost)
+                                scratch_budget=scratch_budget, cost=cost,
+                                reg_budget=reg_budget)
     return findings
 
 
 def verify_compiled(cg, *, scratch_budget: int | None = None,
-                    cost: CostModel | None = None) -> list[Finding]:
+                    cost: CostModel | None = None,
+                    reg_budget: int | None = None) -> list[Finding]:
     """Full audit of a compiled artifact: IR pass + plan pass + recorded
     pattern-class consistency.  Offline/CLI entry point."""
     from .verify import verify_graph
@@ -242,6 +311,6 @@ def verify_compiled(cg, *, scratch_budget: int | None = None,
     findings = verify_graph(cg.graph)
     findings += verify_plan(
         cg.graph, cg.groups, require_cover=True,
-        scratch_budget=scratch_budget, cost=cost,
+        scratch_budget=scratch_budget, cost=cost, reg_budget=reg_budget,
         pattern_classes=getattr(cg.stats, "pattern_classes", None))
     return findings

@@ -32,7 +32,7 @@ from repro import obs
 from repro.core.compiler import CompiledGraph, FusionStats, StitchCompiler, _Group
 from repro.core.cost import HardwareModel, TPU_V5E
 from repro.core.ir import Graph
-from repro.core.pattern import FusionPattern
+from repro.core.pattern import FusionPattern, PackPattern
 from repro.core.tuner import grid_row_block
 
 from .policy import BucketPolicy, BucketStats, EvictionPolicy
@@ -61,12 +61,18 @@ def extract_record(
         if grp.tuned is not None:
             row_block = grid_row_block(grp.tuned.template)
             scratch = tuple(sorted(idx[n] for n in grp.tuned.template.scratch_ops))
+        pack: tuple[tuple[int, ...], ...] = ()
+        if getattr(grp, "pack", None):
+            pack = tuple(sorted(
+                tuple(sorted(idx[m] for m in gset)) for gset in grp.pack
+            ))
         groups.append(
             GroupRecord(
                 members=tuple(sorted(idx[m] for m in grp.members)),
                 kind=grp.kind,
                 row_block=row_block,
                 scratch=scratch,
+                pack=pack,
             )
         )
     ilp = compiled.stats.ilp
@@ -102,7 +108,8 @@ def replay_record(
     names = sig.canon_order
     n = len(names)
     for gr in rec.groups:          # corrupt/hand-edited records: treat as miss
-        if any(not 0 <= i < n for i in gr.members + gr.scratch):
+        flat_pack = tuple(i for gset in getattr(gr, "pack", ()) for i in gset)
+        if any(not 0 <= i < n for i in gr.members + gr.scratch + flat_pack):
             return None
     stats = FusionStats(
         mode=compiler.mode,
@@ -119,7 +126,20 @@ def replay_record(
         if gr.kind == "op" or len(members) == 1 and gr.kind != "pallas":
             groups.append(_Group(members, "op"))
             continue
-        p = FusionPattern(g, members, "cache")
+        pack = tuple(
+            frozenset(names[i] for i in gset)
+            for gset in getattr(gr, "pack", ())
+        ) or None
+        if pack:
+            try:
+                p: FusionPattern = PackPattern(g, members, "cache",
+                                               member_groups=pack)
+            except ValueError:
+                return None        # malformed pack provenance: treat as miss
+            stats.packs += 1
+            stats.packed_subgraphs += len(pack)
+        else:
+            p = FusionPattern(g, members, "cache")
         stats.pattern_classes[p.pattern_class] = (
             stats.pattern_classes.get(p.pattern_class, 0) + 1
         )
@@ -131,14 +151,14 @@ def replay_record(
                 scratch_names=[names[i] for i in gr.scratch],
             )
         if tuned is not None:
-            groups.append(_Group(members, "pallas", tuned))
+            groups.append(_Group(members, "pallas", tuned, pack))
             stats.pallas_groups += 1
             stats.scratch_requested += sum(compiler.cost.scratch_request(p).values())
             stats.scratch_allocated += tuned.scratch_plan.allocated
             if tuned.scratch_plan.allocated:
                 stats.patterns_with_scratch += 1
         else:
-            groups.append(_Group(members, "jnp"))
+            groups.append(_Group(members, "jnp", None, pack))
     # a record always covers every compute node of an isomorphic graph, but
     # degrade gracefully if it somehow doesn't
     for node in g.compute_nodes():
@@ -255,7 +275,8 @@ class StitchCache:
         if budget is None:
             budget = compiler.hw.onchip_budget
         findings = verify_record(g, sig.canon_order, rec,
-                                 scratch_budget=budget, cost=compiler.cost)
+                                 scratch_budget=budget, cost=compiler.cost,
+                                 reg_budget=compiler.cost.reg_budget)
         bad = errors(findings)
         if not bad:
             return rec

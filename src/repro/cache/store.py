@@ -28,9 +28,11 @@ __all__ = ["GroupRecord", "PlanRecord", "MemoryStore", "DiskStore", "TwoTierStor
 
 # v2 added the mesh/PartitionSpec placement component to the key (sharded
 # stitching); v3 added the GenConfig digest (a plan solved under one set of
-# pattern-generation knobs must not replay under another).  Older records
-# are treated as misses on read.
-RECORD_VERSION = 3
+# pattern-generation knobs must not replay under another); v4 added the
+# horizontal-pack provenance (``GroupRecord.pack``) so packed plans replay
+# as packs and the replay verifier can re-check pack legality.  Older
+# records are treated as misses on read.
+RECORD_VERSION = 4
 
 
 @dataclass(frozen=True)
@@ -41,14 +43,20 @@ class GroupRecord:
     kind: str                           # "pallas" | "jnp" | "op"
     row_block: int | None = None        # pallas groups: tuned GRID factor
     scratch: tuple[int, ...] = ()       # pallas groups: VMEM-resident members
+    # horizontal packs: the independent member subgraphs (canonical indices);
+    # () for ordinary dependence-connected groups
+    pack: tuple[tuple[int, ...], ...] = ()
 
     def to_json(self) -> dict:
-        return {
+        d = {
             "members": sorted(self.members),
             "kind": self.kind,
             "row_block": self.row_block,
             "scratch": sorted(self.scratch),
         }
+        if self.pack:
+            d["pack"] = sorted(sorted(gset) for gset in self.pack)
+        return d
 
     @classmethod
     def from_json(cls, d: dict) -> "GroupRecord":
@@ -57,6 +65,7 @@ class GroupRecord:
             kind=d["kind"],
             row_block=d.get("row_block"),
             scratch=tuple(d.get("scratch", ())),
+            pack=tuple(tuple(gset) for gset in d.get("pack", ())),
         )
 
 

@@ -12,10 +12,10 @@ Public surface:
 """
 
 from .cost import CostModel, HardwareModel, TPU_V5E, V100
-from .fusiongen import GenConfig, exploratory_fusion, generate_patterns, multi_step_substitution, substitution_fusion
+from .fusiongen import GenConfig, exploratory_fusion, generate_patterns, multi_step_substitution, packing_fusion, substitution_fusion
 from .ilp import ILPSolver, PlanResult, greedy_fusion_plan, solve_fusion_plan
 from .ir import Graph, GraphBuilder, OpKind, OpNode, ReduceKind
-from .pattern import FusionPattern, PatternClass, contraction_creates_cycle
+from .pattern import FusionPattern, PackPattern, PatternClass, contraction_creates_cycle
 from .scratch import ScratchAllocator, ScratchPlan, dominator_tree, post_dominates
 from .templates import Template, parse_template
 from .tuner import TemplateTuner, TunedKernel, generate_templates
@@ -41,9 +41,10 @@ def __getattr__(name):
 
 __all__ = [
     "Graph", "GraphBuilder", "OpNode", "OpKind", "ReduceKind",
-    "FusionPattern", "PatternClass", "contraction_creates_cycle",
+    "FusionPattern", "PackPattern", "PatternClass",
+    "contraction_creates_cycle",
     "GenConfig", "generate_patterns", "substitution_fusion",
-    "multi_step_substitution", "exploratory_fusion",
+    "multi_step_substitution", "exploratory_fusion", "packing_fusion",
     "CostModel", "HardwareModel", "TPU_V5E", "V100",
     "ILPSolver", "PlanResult", "solve_fusion_plan", "greedy_fusion_plan",
     "Template", "parse_template",

@@ -107,6 +107,8 @@ class FusionStats:
     scratch_allocated: int = 0
     patterns_with_scratch: int = 0
     pallas_groups: int = 0           # groups executed as stitched Pallas
+    packs: int = 0                   # horizontal PackPatterns in the plan
+    packed_subgraphs: int = 0        # independent subgraphs absorbed by packs
     ilp: PlanResult | None = None
     cache_status: str = "off"        # "off" | "miss" | "hit"
     compile_seconds: float = 0.0     # wall time spent producing this artifact
@@ -134,6 +136,9 @@ class _Group:
     members: frozenset[str]
     kind: str                        # "pallas" | "jnp" | "op"
     tuned: TunedKernel | None = None
+    # horizontal-pack provenance: the independent member subgraphs this
+    # group packs (None for ordinary dependence-connected groups)
+    pack: tuple[frozenset[str], ...] | None = None
 
 
 class CompiledGraph:
@@ -226,7 +231,7 @@ class StitchCompiler:
         # anytime ILP: wall-clock seconds before the fusion-plan solve
         # degrades to the greedy heuristic (None = solve to optimality)
         self.plan_budget = plan_budget
-        self.cost = CostModel(hw)
+        self.cost = CostModel(hw, reg_budget=self.gen_cfg.reg_budget)
         self.tuner = TemplateTuner(hw, execution_based=execution_based_eval)
         self.use_pallas = use_pallas
         # Optional repro.cache.StitchCache (duck-typed: lookup/insert) — when
@@ -256,8 +261,10 @@ class StitchCompiler:
             ]
             return pats, None
         with obs.span("compile.pattern_gen", cat="compile", graph=g.name) as s:
-            patterns = generate_patterns(g, self.gen_cfg)
-            s.set(patterns=len(patterns))
+            patterns = generate_patterns(g, self.gen_cfg, self.hw)
+            s.set(patterns=len(patterns),
+                  packs=sum(1 for p in patterns
+                            if getattr(p, "member_groups", None)))
         pscores = [self.cost.score(p) for p in patterns]
         scratch_budget = self.gen_cfg.scratch_budget
         if scratch_budget is None:
@@ -294,8 +301,10 @@ class StitchCompiler:
             budget = self.gen_cfg.scratch_budget
             if budget is None:
                 budget = self.hw.onchip_budget
+        reg_budget = self.cost.reg_budget if self.mode == "stitch" else None
         findings += verify_plan(g, chosen, require_cover=False,
-                                scratch_budget=budget, cost=self.cost)
+                                scratch_budget=budget, cost=self.cost,
+                                reg_budget=reg_budget)
         if errors(findings):
             obs.event("compile.verify_reject", cat="compile", graph=g.name,
                       codes=sorted({f.code for f in errors(findings)}))
@@ -357,11 +366,15 @@ class StitchCompiler:
                 stats.pattern_classes[p.pattern_class] = (
                     stats.pattern_classes.get(p.pattern_class, 0) + 1
                 )
+                pack = tuple(getattr(p, "member_groups", ())) or None
+                if pack:
+                    stats.packs += 1
+                    stats.packed_subgraphs += len(pack)
                 tuned = None
                 if self.mode == "stitch" and self.use_pallas:
                     tuned = self.tuner.tune(p)
                 if tuned is not None:
-                    groups.append(_Group(p.members, "pallas", tuned))
+                    groups.append(_Group(p.members, "pallas", tuned, pack))
                     stats.pallas_groups += 1
                     stats.scratch_requested += sum(
                         self.cost.scratch_request(p).values()
@@ -370,7 +383,7 @@ class StitchCompiler:
                     if tuned.scratch_plan.allocated:
                         stats.patterns_with_scratch += 1
                 else:
-                    groups.append(_Group(p.members, "jnp"))
+                    groups.append(_Group(p.members, "jnp", None, pack))
 
         # why patterns degraded to fused-jnp during this tuning run
         stats.diagnostics = list(self.tuner.diagnostics[diag_start:])

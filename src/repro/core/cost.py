@@ -43,6 +43,14 @@ class HardwareModel:
     bw_half: float = 1 << 17
     # interconnect for the roofline/collective term (per-chip, all links)
     ici_bw: float = 0.0
+    # per-kernel register/VREG live-value budget (paper §4.3's occupancy
+    # loss): the stitched emitter holds every live internal intermediate of
+    # the current row block in vector registers, so a pattern whose peak
+    # live working set exceeds this budget would spill / serialise the
+    # pipeline — the cost model rejects it as *infeasible*, not merely
+    # unattractive, which is what forces over-wide independent regions to
+    # shatter into FFD packs instead of one monolithic kernel.
+    reg_budget: int = 2 * 1024 * 1024
 
     def efficiency(self, nbytes: float) -> float:
         if nbytes <= 0:
@@ -67,6 +75,7 @@ V100 = HardwareModel(
     onchip_budget=96 * 1024,     # shared memory per SM (opt-in 96KB on Volta)
     bw_half=1 << 18,
     ici_bw=150e9,                # NVLink aggregate (unused by fusion scoring)
+    reg_budget=256 * 1024,       # 64K 32-bit registers per SM
 )
 
 TPU_V5E = HardwareModel(
@@ -77,6 +86,7 @@ TPU_V5E = HardwareModel(
     onchip_budget=16 * 1024 * 1024,  # conservative usable VMEM scratch
     bw_half=1 << 17,
     ici_bw=3 * 2 * 50e9,         # 3 links x 2 directions x 50 GB/s
+    reg_budget=2 * 1024 * 1024,  # VREG + low-latency VMEM working set
 )
 
 
@@ -89,13 +99,20 @@ class PatternScore:
     scratch_request: int = 0   # worst-case on-chip bytes before Alg.4 reuse
     saved_bytes: int = 0
     kernels_removed: int = 0
+    reg_request: int = 0       # peak live register bytes (occupancy gate)
 
 
 class CostModel:
-    """Scores fusion patterns; enforces the paper's feasibility gates."""
+    """Scores fusion patterns; enforces the paper's feasibility gates.
 
-    def __init__(self, hw: HardwareModel = TPU_V5E):
+    ``reg_budget`` overrides the hardware's register/live-value budget
+    (``GenConfig.reg_budget`` threads through here); None keeps the
+    hardware default."""
+
+    def __init__(self, hw: HardwareModel = TPU_V5E,
+                 reg_budget: int | None = None):
         self.hw = hw
+        self.reg_budget = hw.reg_budget if reg_budget is None else reg_budget
 
     # -- per-op kernel-time model -------------------------------------------
     def op_bytes(self, g: Graph, name: str) -> int:
@@ -202,6 +219,93 @@ class CostModel:
         rows = 8 if len(node.shape) > 1 else 1
         return minor * rows * (node.bytes // max(node.size, 1))
 
+    # -- register pressure (§4.3 occupancy gate) ------------------------------
+    def register_pressure(self, p: FusionPattern) -> int:
+        """Peak live-value bytes of one row block through the stitched body.
+
+        The emitter evaluates members in topo order holding every internal
+        intermediate of the current row block as a live vector value; a
+        value dies after its last in-pattern consumer.  Wide *independent*
+        regions (interleaved per-expert MoE chains) keep one working set
+        per chain live simultaneously, so their peak grows with the number
+        of chains — the occupancy loss the paper trades against launch
+        savings.  Patterns over :attr:`reg_budget` are infeasible; the FFD
+        packer re-forms the chains into bins that fit.
+        """
+        g = p.graph
+        member_groups = getattr(p, "member_groups", None)
+        if member_groups:
+            # horizontal pack: member subgraphs are independent and laid out
+            # along the kernel's grid dimension (one block range each), so
+            # the per-block live working set is the *widest* subgraph — not
+            # the interleaved sum.  This is the §4.2 occupancy argument: a
+            # pack shares one launch without inflating per-block registers,
+            # which an interleaved monolithic fusion cannot avoid.
+            return max(
+                self.register_pressure(FusionPattern(g, grp, "pack-member"))
+                for grp in member_groups
+            )
+        seq = p.compute_members
+        if len(seq) < 2:
+            return 0
+        counts: dict[int, float] = {}
+        for name in p.external_outputs:
+            shp = g[name].shape
+            if shp and shp[0] > 1:
+                counts[shp[0]] = counts.get(shp[0], 0.0) + 1000.0
+        for name in p.external_inputs:
+            shp = g[name].shape
+            if shp and shp[0] > 1:
+                counts[shp[0]] = counts.get(shp[0], 0.0) + 1.0
+        if not counts:
+            return 0
+        rows = max(counts, key=lambda k: (counts[k], k))
+        rb = min(8, rows)
+        # single-block patterns (registered-custom replay; cross-row
+        # accumulators feeding members, e.g. the packed optimizer's global
+        # grad-norm) run as grid==1 composition: whole-array residency is
+        # the scratch plan's domain, and with one block in flight there is
+        # no occupancy to lose — the register gate only prices row-streamed
+        # interleaving width
+        members = set(p.members)
+        for n in seq:
+            if n.kind is OpKind.CUSTOM and "project" not in n.attrs:
+                return 0
+            if n.kind is OpKind.REDUCTION and 0 in tuple(n.attrs.get("axes", ())):
+                src = g[n.operands[0]]
+                if src.shape and src.shape[0] == rows and any(
+                        u in members for u in g.users(n.name)):
+                    return 0
+
+        def tile(node) -> int:
+            shp = node.shape
+            if shp and shp[0] == rows:
+                return (node.bytes // rows) * rb
+            # not tiled by the row grid (weight converts, transposed
+            # operands): streamed through one (8, minor) tile at a time
+            return min(node.bytes, self._tile_bytes(node))
+
+        pos = {n.name: i for i, n in enumerate(seq)}
+        last_use: dict[str, int] = {}
+        for n in seq:
+            for o in n.operands:
+                if o in pos:
+                    last_use[o] = max(last_use.get(o, -1), pos[n.name])
+        live = 0
+        peak = 0
+        expiry: dict[int, list[int]] = {}
+        for i, n in enumerate(seq):
+            b = tile(n)
+            if n.name in last_use:
+                live += b
+                expiry.setdefault(last_use[n.name], []).append(b)
+                peak = max(peak, live)
+            else:
+                peak = max(peak, live + b)  # transient: streamed straight out
+            for dead in expiry.pop(i, ()):
+                live -= dead
+        return peak
+
     # -- the paper's two scoring paths ---------------------------------------
     def score_model_based(self, p: FusionPattern) -> PatternScore:
         n_kernels = len(p.compute_members)
@@ -215,9 +319,17 @@ class CostModel:
                 f"scratch {total_req}B exceeds budget {self.hw.onchip_budget}B",
                 total_req, 0, 0,
             )
+        reg = self.register_pressure(p)
+        if reg > self.reg_budget:
+            return PatternScore(
+                p, -1.0, False,
+                f"register pressure {reg}B exceeds budget {self.reg_budget}B",
+                total_req, 0, 0, reg,
+            )
         saved = p.saved_bytes
         score = self.hw.mem_time(saved) + (n_kernels - 1) * self.hw.launch_latency
-        return PatternScore(p, score, True, "model", total_req, saved, n_kernels - 1)
+        return PatternScore(p, score, True, "model", total_req, saved,
+                            n_kernels - 1, reg)
 
     def score_execution_based(self, p: FusionPattern, measured_fused: float | None = None) -> PatternScore:
         n_kernels = len(p.compute_members)
@@ -227,12 +339,20 @@ class CostModel:
         total_req = sum(req.values()) + self.custom_scratch(p)
         if total_req > self.hw.onchip_budget:
             return PatternScore(p, -1.0, False, "scratch over budget", total_req, 0, 0)
+        reg = self.register_pressure(p)
+        if reg > self.reg_budget:
+            return PatternScore(
+                p, -1.0, False,
+                f"register pressure {reg}B exceeds budget {self.reg_budget}B",
+                total_req, 0, 0, reg,
+            )
         unfused = sum(self.kernel_time(p.graph, n.name) for n in p.compute_members)
         fused = measured_fused if measured_fused is not None else self.fused_time(p)
         score = unfused + (n_kernels - 1) * self.hw.launch_latency - fused
         feasible = score >= 0
         return PatternScore(
-            p, score, feasible, "execution", total_req, p.saved_bytes, n_kernels - 1
+            p, score, feasible, "execution", total_req, p.saved_bytes,
+            n_kernels - 1, reg
         )
 
     # -- dispatch rule (§4.3: model-based for most, execution for complex) ---

@@ -243,6 +243,26 @@ def solve_fusion_plan(
             overlaps[i].add(j)
             overlaps[j].add(i)
 
+    # Horizontal packs span distant regions of the graph, so a pack and a
+    # vertical pattern that are each acyclic alone routinely close a cycle
+    # *pairwise* once both are contracted — and a two-pattern cycle holds no
+    # matter what else is selected, so it is a hard mutual exclusion, not a
+    # lazy cut.  Folding these into the overlap constraints up front keeps
+    # the cycle-cut loop for the rare >= 3-pattern cycles only; without
+    # this, pack-heavy graphs (stacked RNN steps) burn one solve round per
+    # pair and blow through ``max_cycle_rounds``.
+    pack_idx = {i for i, p in enumerate(pats)
+                if getattr(p, "member_groups", None)}
+    for i in sorted(pack_idx):
+        for j in range(len(pats)):
+            if j == i or j in overlaps[i] or (j in pack_idx and j < i):
+                continue
+            if deadline is not None and time.monotonic() > deadline:
+                break
+            if _find_cycle_patterns(g, [pats[i], pats[j]]) is not None:
+                overlaps[i].add(j)
+                overlaps[j].add(i)
+
     def greedy(rounds: int, cuts: int, nodes: int) -> PlanResult:
         chosen, val = greedy_fusion_plan(g, pats, w, overlaps)
         return PlanResult(chosen, val, rounds, cuts, nodes,

@@ -14,7 +14,8 @@ from typing import Iterable
 
 from .ir import Graph, OpKind, OpNode, ReduceKind
 
-__all__ = ["FusionPattern", "PatternClass", "contraction_creates_cycle"]
+__all__ = ["FusionPattern", "PackPattern", "PatternClass",
+           "contraction_creates_cycle"]
 
 
 class PatternClass:
@@ -114,6 +115,57 @@ class FusionPattern:
         names = ",".join(sorted(self.members)[:6])
         more = f",+{len(self.members)-6}" if len(self.members) > 6 else ""
         return f"FusionPattern[{self.pattern_class}]({names}{more})"
+
+
+@dataclass(frozen=True)
+class PackPattern(FusionPattern):
+    """A *horizontal* pattern: the union of several mutually independent
+    member subgraphs packed into one kernel (paper §4.2's independent-op
+    packing).  ``member_groups`` records the provenance — which nodes came
+    from which packed subgraph — so the plan verifier can re-check pack
+    legality (disjoint groups, no cross-group dependence) and ``report()``
+    can surface pack statistics.  Everything else (cost, ILP exclusivity,
+    emission) treats the pack as an ordinary pattern over ``members``."""
+
+    member_groups: tuple[frozenset[str], ...] = field(
+        default=(), compare=False)
+
+    def __post_init__(self):
+        super().__post_init__()
+        if len(self.member_groups) < 2:
+            raise ValueError("pack needs >= 2 member subgraphs")
+        seen: set[str] = set()
+        union: set[str] = set()
+        for grp in self.member_groups:
+            if not grp:
+                raise ValueError("empty pack member subgraph")
+            if grp & seen:
+                raise ValueError(
+                    f"pack member subgraphs overlap on {sorted(grp & seen)[:4]}")
+            seen |= grp
+            union |= grp
+        if union != set(self.members):
+            raise ValueError("pack member subgraphs do not cover the pattern")
+
+    @cached_property
+    def cross_group_edges(self) -> list[tuple[str, str]]:
+        """(producer, consumer) pairs crossing two member subgraphs — must be
+        empty for a legal pack (the subgraphs are independent by
+        construction; the verifier re-checks via this property)."""
+        owner: dict[str, int] = {}
+        for i, grp in enumerate(self.member_groups):
+            for m in grp:
+                owner[m] = i
+        bad: list[tuple[str, str]] = []
+        for n in self.nodes:
+            for o in n.operands:
+                if o in owner and owner[o] != owner[n.name]:
+                    bad.append((o, n.name))
+        return bad
+
+    def __repr__(self) -> str:
+        return (f"PackPattern[{self.pattern_class}]"
+                f"({len(self.member_groups)}x{len(self.members)//max(len(self.member_groups),1)})")
 
 
 def contraction_creates_cycle(graph: Graph, members: Iterable[str]) -> bool:

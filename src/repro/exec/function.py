@@ -564,6 +564,8 @@ class StitchedFunction:
         s = sp.compiled.stats
         return {"mode": s.mode, "n_kernels": s.n_kernels, "n_ops": s.n_ops,
                 "pallas_groups": s.pallas_groups,
+                "packs": getattr(s, "packs", 0),
+                "packed_subgraphs": getattr(s, "packed_subgraphs", 0),
                 "modeled_time": s.modeled_time,
                 "cache_status": s.cache_status,
                 "verify": getattr(s, "verify", None)}

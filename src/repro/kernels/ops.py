@@ -27,6 +27,7 @@ from . import activations as _act
 from . import softmax as _softmax
 from . import rope as _rope
 from . import cross_entropy as _xent
+from . import decode_attention as _decode
 from . import flash_attention as _flash
 from . import mamba_scan as _mamba
 from . import rg_lru as _rglru
@@ -119,6 +120,15 @@ def attention(q, k, v, *, causal: bool = True, scale: float | None = None,
         pos_q = (q_offset + jnp.arange(q.shape[1]))[None, :]
     return _ref.attention(q, k, v, causal=causal, scale=scale, window=window,
                           positions_q=pos_q)
+
+
+def decode_attention(q, k, v, positions, *, scale: float | None = None,
+                     window: int | None = None):
+    """Single-token decode attention against a dense KV view; pallas-only
+    (callers gate on :func:`get_mode` — the ref path is the einsum chain in
+    :func:`repro.models.layers.apply_attention`)."""
+    return _decode.decode_attention(q, k, v, positions, scale=scale,
+                                    window=window)
 
 
 def mamba_scan(x, delta, A, B, C, D, return_state: bool = False):

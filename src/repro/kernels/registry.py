@@ -109,5 +109,50 @@ def _router_flops(node: OpNode, g: Graph) -> float:
     return float(t * e * 8)
 
 
+def _decode_attn_flops(node: OpNode, g: Graph) -> float:
+    # pallas_call operands: (positions, q^T, k^T, v^T) — see
+    # kernels/decode_attention.py; q^T is (B, Hq, 1, Dh), kv^T (B, Hkv, Smax, Dh)
+    if len(node.operands) < 3:
+        return 0.0
+    q = g[node.operands[1]].shape
+    kv = g[node.operands[2]].shape
+    if len(q) != 4 or len(kv) != 4:
+        return 0.0
+    b, hq, _, dh = q
+    smax = kv[2]
+    # one QK^T row and one PV row per (batch, head): 2*Smax*Dh MACs each
+    return 4.0 * b * hq * smax * dh
+
+
+def _decode_attn_scratch(node: OpNode, g: Graph) -> int:
+    if len(node.operands) < 2:
+        return 0
+    q = g[node.operands[1]].shape
+    if len(q) != 4:
+        return 0
+    dh = q[3]
+    return (2 + dh) * 4                      # f32 m + l + (1, Dh) acc
+
+
+def _vpu_flops(per_elem: float, operand: int = 0):
+    """Memory-bound VPU kernels (norms, rope, GLU): a few ops per element of
+    the named operand, no MXU work, no explicit scratch (VREG-only)."""
+
+    def flops(node: OpNode, g: Graph) -> float:
+        if len(node.operands) <= operand:
+            return 0.0
+        return per_elem * float(g[node.operands[operand]].size)
+
+    return flops
+
+
 register(StitchableKernel("_flash_kernel", _flash_flops, _flash_scratch))
 register(StitchableKernel("_router_kernel", _router_flops, lambda n, g: 0))
+register(StitchableKernel("_decode_attn_kernel", _decode_attn_flops,
+                          _decode_attn_scratch))
+register(StitchableKernel("_rmsnorm_kernel", _vpu_flops(4.0), lambda n, g: 0))
+register(StitchableKernel("_rmsnorm_residual_kernel", _vpu_flops(5.0),
+                          lambda n, g: 0))
+register(StitchableKernel("_layernorm_kernel", _vpu_flops(6.0), lambda n, g: 0))
+register(StitchableKernel("_rope_kernel", _vpu_flops(6.0), lambda n, g: 0))
+register(StitchableKernel("_glu_kernel", _vpu_flops(4.0), lambda n, g: 0))

@@ -144,4 +144,5 @@ def build_model(cfg: ModelConfig) -> Model:
             lm.decode_step(p, cache, tokens, cfg, kv_limit=kv_limit),
         init_cache=lambda b, s: lm.init_cache(cfg, b, s),
         init_paged_cache=lambda n, ps: lm.init_paged_cache(cfg, n, ps),
+        block_fn=lambda lp, x: lm.block_forward(lp, x, cfg),
     )

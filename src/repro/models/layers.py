@@ -266,6 +266,16 @@ def apply_attention(
             new_cache = {"k": ck, "v": cv, "length": length + S}
         Smax = ck.shape[1]
         group = Hq // Hkv
+        if S == 1 and ops.get_mode() == "pallas" \
+                and not cfg.shard_activations:
+            # registered Pallas decode kernel: the whole masked-softmax
+            # attention chain is ONE stitchable CUSTOM node (the position
+            # mask covers length validity, so stale cache rows never
+            # contribute — same semantics as the einsum path below)
+            out = ops.decode_attention(q, ck, cv, positions[:, 0],
+                                       scale=scale, window=window)
+            out = out.reshape(B, S, Hq * dh) @ p["wo"].astype(dt)
+            return out, new_cache
         # grouped-GQA einsum against the cache at native Hkv width: no
         # jnp.repeat copy, no f32 cache clone — bf16 dots accumulate in f32
         # (§Perf decode iteration)
@@ -415,3 +425,30 @@ def apply_moe(p: Params, x2d, cfg: ModelConfig):
     aux = E * jnp.sum(frac * jnp.mean(probs, axis=0))
     dropped = n_drop / (T * k)
     return y, {"moe_aux": aux, "moe_drop_frac": dropped.astype(jnp.float32)}
+
+
+def apply_moe_dense(p: Params, x2d, cfg: ModelConfig):
+    """Dense (soft) MoE: every expert runs on every token, combined by the
+    full router-softmax gates.  x2d: (T, D) -> (T, D).
+
+    Unlike :func:`apply_moe` there is no sort/gather dispatch, so the HLO is
+    E structurally-identical, mutually-independent FFN chains hanging off the
+    shared input — exactly the shape the horizontal packer
+    (:func:`repro.core.fusiongen.packing_fusion`) bins into shared stitched
+    kernels.  This is the block-level stitching form (``Model.block_fn``) and
+    the packing benchmark workload; train/serve keep the sparse dispatch.
+    """
+    m = cfg.moe
+    dt = cfg.dtype
+    logits = (x2d @ p["router"].astype(dt)).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1).astype(dt)        # (T, E)
+    y = jnp.zeros_like(x2d)
+    for e in range(m.n_experts):
+        gt = x2d @ p["w_gate"][e].astype(dt)
+        up = x2d @ p["w_up"][e].astype(dt)
+        h = ops.swiglu(gt, up)
+        ye = h @ p["w_down"][e].astype(dt)
+        y = y + gates[:, e:e + 1] * ye
+    if m.n_shared:
+        y = y + apply_mlp(p["shared"], x2d, cfg)
+    return y

@@ -25,6 +25,7 @@ from .layers import (
     apply_attention,
     apply_mlp,
     apply_moe,
+    apply_moe_dense,
     apply_norm,
     init_attention,
     init_mlp,
@@ -92,6 +93,28 @@ def _layer_fn(h, lp, cfg: ModelConfig, positions):
         mlp_out = apply_mlp(lp["mlp"], m_in, cfg)
         aux = _empty_aux()
     return h + mlp_out, aux
+
+
+def block_forward(lp: Params, x, cfg: ModelConfig):
+    """Pure single-block forward — the ``Model.block_fn`` stitching entry
+    (see examples/stitch_fn.py).  x: (B, S, D) -> (B, S, D).
+
+    MoE blocks use the *dense* expert form (:func:`apply_moe_dense`): the
+    sort-based capacity dispatch is gather/scatter-partitioned anyway, while
+    the dense form exposes E independent per-expert chains for the
+    horizontal packer."""
+    B, S, D = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    a_in = apply_norm(lp["norm1"], x, cfg)
+    attn_out, _ = apply_attention(lp["attn"], a_in, cfg, positions)
+    x = x + attn_out
+    m_in = apply_norm(lp["norm2"], x, cfg)
+    if cfg.family == "moe":
+        y2d = apply_moe_dense(lp["mlp"], m_in.reshape(B * S, D), cfg)
+        mlp_out = y2d.reshape(B, S, D)
+    else:
+        mlp_out = apply_mlp(lp["mlp"], m_in, cfg)
+    return x + mlp_out
 
 
 def _maybe_remat(fn, cfg: ModelConfig):

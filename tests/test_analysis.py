@@ -203,6 +203,60 @@ class TestVerifyPlan:
         assert "RA027" in codes(fs)
 
 
+class TestVerifyPacks:
+    """Horizontal packs: provenance must be disjoint+covering (RA060), truly
+    independent (RA061), and within the register budget (RA062)."""
+
+    def _twins(self):
+        b = GraphBuilder("twins")
+        p0 = b.param("p0", (8, 64))
+        p1 = b.param("p1", (8, 64))
+        a1 = b.ew("exp", p0)
+        a2 = b.ew("neg", a1)
+        c1 = b.ew("exp", p1)
+        c2 = b.ew("neg", c1)
+        return b.build(outputs=[a2, c2]), (a1, a2, c1, c2)
+
+    def test_clean_pack_has_no_findings(self):
+        from repro.analysis.plan import GroupView
+        g, (a1, a2, c1, c2) = self._twins()
+        v = GroupView({a1, a2, c1, c2}, "pallas",
+                      pack=(frozenset({a1, a2}), frozenset({c1, c2})))
+        assert verify_plan(g, [v]) == []
+
+    def test_ra060_overlap_and_cover(self):
+        from repro.analysis.plan import GroupView
+        g, (a1, a2, c1, c2) = self._twins()
+        overlapping = GroupView({a1, a2, c1, c2}, "pallas",
+                                pack=(frozenset({a1, a2, c1}),
+                                      frozenset({c1, c2})))
+        assert "RA060" in codes(verify_plan(g, [overlapping]))
+        short = GroupView({a1, a2, c1, c2}, "pallas",
+                          pack=(frozenset({a1, a2}), frozenset({c1})))
+        assert "RA060" in codes(verify_plan(g, [short]))
+
+    def test_ra061_cross_subgraph_dependence(self):
+        from repro.analysis.plan import GroupView
+        g, (a1, a2, c1, c2) = self._twins()
+        # mis-assign a1's consumer a2 to the other subgraph: the a1 -> a2
+        # edge now crosses packed subgraphs
+        v = GroupView({a1, a2, c1, c2}, "pallas",
+                      pack=(frozenset({a1, c1}), frozenset({a2, c2})))
+        assert "RA061" in codes(verify_plan(g, [v]))
+
+    def test_ra062_register_budget(self):
+        from repro.analysis.plan import GroupView
+        from repro.core import CostModel
+        g, (a1, a2, c1, c2) = self._twins()
+        v = GroupView({a1, a2, c1, c2}, "pallas",
+                      pack=(frozenset({a1, a2}), frozenset({c1, c2})))
+        cost = CostModel()
+        fs = verify_plan(g, [v], cost=cost, reg_budget=1)
+        assert "RA062" in codes(fs)
+        assert verify_plan(g, [v], cost=cost,
+                           reg_budget=cost.reg_budget) == []
+
+
 # ---------------------------------------------------------------------------
 # pass 3: donation/aliasing
 # ---------------------------------------------------------------------------

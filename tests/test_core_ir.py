@@ -167,6 +167,66 @@ def test_plan_is_disjoint_and_acyclic():
     assert _find_cycle_patterns(g, res.chosen) is None
 
 
+def test_pack_member_exclusivity_never_double_covers():
+    """A PackPattern and vertical patterns over its member subgraphs are
+    mutually exclusive in every ILP solution — whichever wins, no node is
+    ever covered by two chosen patterns."""
+    from repro.core.pattern import PackPattern
+
+    b = GraphBuilder("excl")
+    p0 = b.param("p0", (8, 64))
+    p1 = b.param("p1", (8, 64))
+    a1 = b.ew("exp", p0)
+    a2 = b.ew("neg", a1)
+    c1 = b.ew("exp", p1)
+    c2 = b.ew("neg", c1)
+    g = b.build(outputs=[a2, c2])
+    pack = PackPattern(g, frozenset({a1, a2, c1, c2}), "manual",
+                       member_groups=(frozenset({a1, a2}),
+                                      frozenset({c1, c2})))
+    pats = [pack,
+            FusionPattern(g, frozenset({a1, a2}), "manual"),
+            FusionPattern(g, frozenset({c1, c2}), "manual")]
+    for scores in ([3.0, 2.0, 2.0], [1.0, 2.0, 2.0], [5.0, 1.0, 1.0]):
+        res = solve_fusion_plan(g, pats, list(scores))
+        seen = set()
+        for p in res.chosen:
+            assert not (p.members & seen), "node double-covered"
+            seen |= p.members
+        if any(getattr(p, "member_groups", None) for p in res.chosen):
+            # the pack covers everything: nothing else may co-select
+            assert len(res.chosen) == 1
+
+
+def test_pack_pairwise_cycle_is_hard_exclusion():
+    """A pack and a vertical pattern that close a cycle only when BOTH are
+    contracted (P -> Q and Q -> P through different member pairs) are
+    mutually excluded up front — the plan stays acyclic and keeps the
+    better-scoring of the two."""
+    from repro.core.ilp import _find_cycle_patterns
+    from repro.core.pattern import PackPattern
+
+    b = GraphBuilder("paircyc")
+    p0 = b.param("p0", (8, 64))
+    p1 = b.param("p1", (8, 64))
+    a = b.ew("exp", p0)      # pack member 1
+    q1 = b.ew("neg", a)      # vertical member (consumes pack)
+    q2 = b.ew("relu", p1)    # vertical member (feeds pack)
+    d = b.ew("tanh", q2)     # pack member 2
+    g = b.build(outputs=[q1, d])
+    pack = PackPattern(g, frozenset({a, d}), "manual",
+                       member_groups=(frozenset({a}), frozenset({d})))
+    vert = FusionPattern(g, frozenset({q1, q2}), "manual")
+    assert _find_cycle_patterns(g, [pack]) is None
+    assert _find_cycle_patterns(g, [vert]) is None
+    assert _find_cycle_patterns(g, [pack, vert]) is not None
+    for scores in ([2.0, 1.0], [1.0, 2.0]):
+        res = solve_fusion_plan(g, [pack, vert], list(scores))
+        assert len(res.chosen) == 1
+        assert _find_cycle_patterns(g, res.chosen) is None
+        assert res.objective == max(scores)
+
+
 # ---------------------------------------------------------- cost model ------
 
 def test_cost_model_monotonic_bandwidth():

@@ -367,6 +367,53 @@ def test_scheduler_counts_prefix_hits(setup):
     assert eng.report()["prefix_cache"]["hit_rate"] == 0.75
 
 
+# -- registered Pallas decode attention ----------------------------------------
+
+def test_pallas_decode_attention_collapses_plan(setup):
+    """Under kernel_mode('pallas') with unrolled layers, decode routes the
+    cache attention through the registered ``_decode_attn_kernel``: paged
+    tokens still match dense, the per-layer masked-softmax einsum chain is
+    ONE custom node, and the stitched decode plan collapses because the
+    registered kernels fuse with their neighbours instead of partitioning
+    them."""
+    import dataclasses
+
+    from repro.kernels import ops
+
+    cfg, _, _ = setup
+    cfg = dataclasses.replace(cfg, scan_layers=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts, news = _workload(cfg)
+    prompts, news = prompts[:3], news[:3]
+
+    with ops.kernel_mode("pallas"):
+        svc = CompilationService(max_background=0)
+        paged = Engine(model, params,
+                       ServeConfig(batch=2, max_len=64, paged=True,
+                                   page_size=8, stitch_execute=True),
+                       stitch_service=svc)
+        dense = Engine(model, params,
+                       ServeConfig(batch=2, max_len=64, paged=False))
+        ref = _drain_tokens(dense, prompts, news)
+        got = _drain_tokens(paged, prompts, news)
+        assert got == ref
+
+        g = paged._exec._active.graph
+        decode_customs = [
+            n for n in g.nodes.values()
+            if n.kind.value == "custom"
+            and n.attrs.get("kernel") == "_decode_attn_kernel"
+        ]
+        assert len(decode_customs) == cfg.n_layers   # one per layer
+        art = svc.compiler("stitch").compile(g, bypass_cache_lookup=True)
+        # the registered-kernel plan: 333 ops into 57 kernels for the
+        # 2-layer reduced config (82 kernels before _decode_attn_kernel and
+        # the VPU kernels were registered; the ref-mode einsum plan needs 70)
+        assert art.stats.n_kernels <= 60
+        assert art.stats.pallas_groups >= 10
+
+
 # -- deprecation ---------------------------------------------------------------
 
 def test_legacy_rect_generate_warns_once(setup):
